@@ -1,0 +1,49 @@
+"""Shared benchmark helpers: the reduced case-study setup (paper SSV at
+CI scale) and CSV emission in ``name,us_per_call,derived`` format."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Optional
+
+from repro.configs.base import FedConfig
+from repro.configs.gpt2_small import gpt2_tiny
+from repro.data import banking77, partition
+
+# scale knobs (env-overridable so the full run can go bigger)
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.06"))
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "10"))
+PAD_LEN = int(os.environ.get("REPRO_BENCH_PAD", "24"))
+SEEDS = tuple(int(s) for s in os.environ.get(
+    "REPRO_BENCH_SEEDS", "0").split(","))      # paper uses 0,1,42
+
+
+def case_study_setup(seed: int = 0, scale: Optional[float] = None,
+                     class_skew: float = 0.0):
+    cfg = gpt2_tiny()
+    pub, tr, te = banking77.paper_splits(cfg.vocab_size, pad_len=PAD_LEN,
+                                         seed=seed,
+                                         scale=scale or SCALE)
+    clients = partition.iid_partition(tr, 3, seed=seed)
+    return cfg, pub, clients, te
+
+
+def fed_config(framework: str, seed: int = 0, **kw) -> FedConfig:
+    base = dict(framework=framework, n_clients=3, rounds=ROUNDS,
+                lora_rank=4, lora_alpha=32.0, lora_dropout=0.0,
+                split_layer=2, kd_epochs=1, lr=1e-3, seed=seed)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable, *args, reps: int = 3, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / reps * 1e6

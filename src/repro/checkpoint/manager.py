@@ -1,0 +1,61 @@
+"""Step-indexed checkpoint manager with retention."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+from repro.checkpoint import serialization
+
+_FMT = "ckpt_{step:08d}.npz"
+_RE = re.compile(r"ckpt_(\d{8})\.npz$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None) -> str:
+        path = os.path.join(self.dir, _FMT.format(step=step))
+        serialization.save_npz(path, tree)
+        if metadata is not None:
+            with open(path + ".json", "w") as f:
+                json.dump(metadata, f)
+        self._gc()
+        return path
+
+    def steps(self):
+        out = []
+        for fn in os.listdir(self.dir):
+            m = _RE.match(fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: Optional[int] = None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, _FMT.format(step=step))
+        tree = serialization.load_npz(path, template)
+        meta_path = path + ".json"
+        meta: Any = None
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+        return tree, meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep_n)]:
+            p = os.path.join(self.dir, _FMT.format(step=s))
+            os.remove(p)
+            if os.path.exists(p + ".json"):
+                os.remove(p + ".json")

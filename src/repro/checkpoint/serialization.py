@@ -1,0 +1,68 @@
+"""Pytree <-> flat-npz serialization (no orbax in this environment).
+
+Paths are '/'-joined key strings; tuples use integer segments.  Restores
+into an identically-structured template tree."""
+from __future__ import annotations
+
+import io
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def flatten_tree(tree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+
+    def rec(t, path):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                rec(t[k], f"{path}/{k}" if path else str(k))
+        elif isinstance(t, (tuple, list)):
+            for i, v in enumerate(t):
+                rec(v, f"{path}/{i}" if path else str(i))
+        elif t is None:
+            pass
+        else:
+            arr = np.asarray(t)
+            if arr.dtype.kind not in "biufc":     # ml_dtypes (bf16 etc.):
+                arr = np.asarray(t, np.float32)   # npz can't round-trip them
+            out[path] = arr
+
+    rec(tree, prefix)
+    return out
+
+
+def unflatten_into(template, flat: Dict[str, np.ndarray], prefix: str = ""):
+    """Rebuild a tree shaped like ``template`` from ``flat``."""
+
+    def rec(t, path):
+        if isinstance(t, dict):
+            return {k: rec(t[k], f"{path}/{k}" if path else str(k))
+                    for k in t}
+        if isinstance(t, (tuple, list)):
+            return tuple(rec(v, f"{path}/{i}" if path else str(i))
+                         for i, v in enumerate(t))
+        if t is None:
+            return None
+        arr = flat[path]
+        return jax.numpy.asarray(arr).astype(t.dtype) if hasattr(
+            t, "dtype") else arr
+
+    return rec(template, prefix)
+
+
+def save_npz(path: str, tree) -> int:
+    flat = flatten_tree(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    data = buf.getvalue()
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+def load_npz(path: str, template):
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return unflatten_into(template, flat)

@@ -1,0 +1,244 @@
+"""Configuration dataclasses for the repro framework.
+
+``ModelConfig`` is a single schema that covers every assigned architecture
+family (dense / moe / hybrid / ssm / vlm / audio).  Architectures are
+expressed as a *layer-type sequence* plus per-layer MLP kind, so one
+functional transformer core (models/transformer.py) serves all of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# Layer kinds understood by models/transformer.py
+ATTN = "attn"              # global causal self-attention
+LOCAL_ATTN = "local_attn"  # sliding-window self-attention
+RGLRU = "rglru"            # RG-LRU recurrent block (RecurrentGemma)
+RWKV6 = "rwkv6"            # RWKV-6 "Finch" time-mix block
+
+FAMILIES = ("dense", "moe", "hybrid", "ssm", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters.  One instance per assigned arch."""
+
+    name: str
+    family: str                       # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int                      # query heads (0 for attn-free archs)
+    n_kv_heads: int                   # GQA KV heads
+    d_ff: int
+    vocab_size: int
+
+    # -- attention details ----------------------------------------------
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qkv_bias: bool = False            # qwen2-style QKV bias
+    qk_norm: bool = False             # qwen3-style per-head RMSNorm on q,k
+    sliding_window: int = 0           # 0 -> global attention (mixtral: 4096)
+    rope_theta: float = 10_000.0
+    use_rope: bool = True             # False -> learned absolute positions
+    max_position_embeddings: int = 1_048_576
+
+    # -- MLP / MoE --------------------------------------------------------
+    activation: str = "swiglu"        # swiglu | gelu | relu2
+    n_experts: int = 0                # 0 -> dense MLP
+    top_k: int = 0
+    router_aux_coef: float = 0.01     # load-balance loss coefficient
+    moe_capacity_factor: float = 1.25  # train-time token-drop threshold
+    moe_dispatch: str = "global"      # global | batched (SSPerf hillclimb)
+
+    # -- layer pattern ----------------------------------------------------
+    # None -> homogeneous (all `attn`).  RecurrentGemma: ("rglru","rglru",
+    # "local_attn") repeated; rwkv6: all "rwkv6".
+    layer_pattern: Optional[Tuple[str, ...]] = None
+
+    # -- recurrent-family extras -----------------------------------------
+    lru_width: int = 0                # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4             # RecurrentGemma temporal-conv width
+    local_window: int = 2048          # window for LOCAL_ATTN layers
+
+    # -- norms / embeddings ----------------------------------------------
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    embed_scale: bool = False         # gemma-style sqrt(d_model) scaling
+
+    # -- encoder-decoder (whisper) ----------------------------------------
+    n_encoder_layers: int = 0         # >0 -> encoder-decoder model
+    encoder_seq_len: int = 1500       # whisper 30s -> 1500 frames
+
+    # -- multimodal (llava) ------------------------------------------------
+    n_image_tokens: int = 0           # >0 -> embedding-prefix VLM
+    image_embed_dim: int = 0          # projector input dim (stubbed frontend)
+
+    dtype: str = "bfloat16"
+    citation: str = ""
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expanded per-layer kind sequence of length n_layers."""
+        if self.layer_pattern is None:
+            return (ATTN,) * self.n_layers
+        pat = self.layer_pattern
+        reps = -(-self.n_layers // len(pat))
+        return (pat * reps)[: self.n_layers]
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k in (RGLRU, RWKV6) for k in self.layer_kinds)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True when decode state does not grow with context length."""
+        return all(
+            k in (RGLRU, RWKV6, LOCAL_ATTN) for k in self.layer_kinds
+        ) or (self.sliding_window > 0)
+
+    # -- parameter counting (analytic; used by roofline + fed metrics) ---
+    def param_count(self) -> int:
+        return sum(x for x, _ in self._param_terms())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts active)."""
+        return sum(a for _, a in self._param_terms())
+
+    def _param_terms(self):
+        """Yields (total, active) parameter-count pairs per component."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        yield V * d, V * d                                   # embedding
+        if not self.tie_embeddings:
+            yield V * d, V * d                               # lm head
+        for kind in self.layer_kinds:
+            if kind in (ATTN, LOCAL_ATTN):
+                q = d * self.n_heads * self.head_dim
+                kv = 2 * d * self.n_kv_heads * self.head_dim
+                o = self.n_heads * self.head_dim * d
+                yield q + kv + o, q + kv + o
+            elif kind == RGLRU:
+                w = self.lru_width
+                # in/out proj (2 branches) + conv1d + gates + out
+                n = 2 * d * w + self.conv1d_width * w + 3 * w + w * d
+                yield n, n
+            elif kind == RWKV6:
+                # r,k,v,g,o projections + decay lora + token-shift mixes
+                n = 5 * d * d + 2 * d * 64 + 6 * d
+                yield n, n
+            # MLP
+            if self.n_experts and kind != RWKV6:
+                mult = 3 if self.activation == "swiglu" else 2
+                per_e = mult * d * ff
+                yield (self.n_experts * per_e + d * self.n_experts,
+                       self.top_k * per_e + d * self.n_experts)
+            else:
+                mult = 3 if self.activation == "swiglu" else 2
+                yield mult * d * ff, mult * d * ff
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp + cross-attn params in decoder
+            # (decoder cross-attn counted here for simplicity)
+            enc = self.n_encoder_layers * (
+                4 * d * d + 2 * d * ff)
+            xattn = self.n_layers * 4 * d * d
+            yield enc + xattn, enc + xattn
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256,
+                n_experts: int = 4) -> "ModelConfig":
+        """A smoke-test-sized variant of the same family (charter: <=2
+        layers, d_model<=512, <=4 experts)."""
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        n_kv = min(self.n_kv_heads, n_heads) if n_heads else 0
+        pat = self.layer_pattern
+        if pat is not None:
+            n_layers = max(n_layers, len(pat))   # keep one full pattern
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=max(1, n_kv),
+            head_dim=d_model // n_heads if n_heads else 0,
+            d_ff=d_model * 3,
+            vocab_size=512,
+            n_experts=min(self.n_experts, n_experts) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            lru_width=d_model,
+            local_window=64,
+            sliding_window=64 if self.sliding_window else 0,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            encoder_seq_len=16 if self.n_encoder_layers else 1500,
+            n_image_tokens=8 if self.n_image_tokens else 0,
+            image_embed_dim=64 if self.image_embed_dim else 0,
+            max_position_embeddings=4096,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # "train" | "prefill" | "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Federated fine-tuning round configuration (paper SS II/V)."""
+    framework: str = "fedllm"        # fedllm | kd | split
+    n_clients: int = 3
+    rounds: int = 10
+    local_epochs: int = 1
+    # PEFT
+    peft: str = "lora"               # lora | adapter | prompt | full
+    lora_rank: int = 8
+    lora_alpha: float = 32.0
+    lora_dropout: float = 0.1
+    lora_targets: Tuple[str, ...] = ("wq", "wk", "wv")  # paper: attn.c_attn
+    # KD-FedLLM
+    public_dataset_size: int = 512
+    kd_temperature: float = 2.0
+    kd_epochs: int = 1
+    logit_topk: int = 0              # 0 = dense logits (paper baseline)
+    logit_quant_bits: int = 0        # 0 = fp32 logits
+    # Split-FedLLM
+    split_layer: int = 1             # client keeps layers [0, split_layer)
+    split_mode: str = "inter"        # inter | intra
+    activation_quant_bits: int = 0   # 0 = bf16/fp32 activations
+    # heterogeneous clients (SS IV.A.2)
+    client_ranks: Optional[Tuple[int, ...]] = None
+    hetero_agg: str = "zeropad"      # zeropad | svd
+    # optimization
+    lr: float = 1e-3
+    optimizer: str = "adam"
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Distributed training-step configuration (launch layer)."""
+    remat: str = "none"              # none | full | selective
+    scan_layers: bool = True
+    grad_accum: int = 1
+    param_dtype: str = "bfloat16"
+    loss_dtype: str = "float32"
+    shard_lm_head_vocab: bool = True
+    use_flash_kernel: bool = False   # interpret-mode Pallas off the hot path

@@ -1,0 +1,27 @@
+"""GPT-2 — the paper's case-study model (SSV) [Radford et al. 2019].
+
+``gpt2()`` is the real 124M config; ``gpt2_tiny()`` is the reduced variant
+the CI-speed case-study benchmarks run (same family: learned positions,
+LayerNorm, GELU, MHA with QKV bias — the paper's LoRA target
+``attn.c_attn`` corresponds to targets ("wq","wk","wv") here)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def gpt2() -> ModelConfig:
+    return ModelConfig(
+        name="gpt2", family="dense", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=50257, qkv_bias=True,
+        activation="gelu", norm="layernorm", use_rope=False,
+        max_position_embeddings=1024, tie_embeddings=True,
+        citation="Radford et al., 2019 (OpenAI blog)")
+
+
+def gpt2_tiny(vocab_size: int = 512) -> ModelConfig:
+    return ModelConfig(
+        name="gpt2-tiny", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=vocab_size,
+        qkv_bias=True, activation="gelu", norm="layernorm", use_rope=False,
+        max_position_embeddings=256, tie_embeddings=True,
+        citation="reduced GPT-2 family for case-study benchmarks")

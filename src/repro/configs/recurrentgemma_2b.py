@@ -1,0 +1,13 @@
+"""RecurrentGemma-2B (Griffin hybrid: RG-LRU + local attention, 1 attn per
+3 blocks) [arXiv:2402.19427]."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b", family="hybrid", n_layers=26,
+        d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256, d_ff=7680,
+        vocab_size=256_000, activation="swiglu", norm="rmsnorm",
+        layer_pattern=("rglru", "rglru", "local_attn"), local_window=2048,
+        lru_width=2560, conv1d_width=4, tie_embeddings=True,
+        embed_scale=True, citation="arXiv:2402.19427 (Griffin/RecurrentGemma)")

@@ -1,0 +1,12 @@
+"""RWKV-6 "Finch" 1.6B: attention-free, data-dependent decay
+[arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", family="ssm", n_layers=24, d_model=2048,
+        n_heads=0, n_kv_heads=0, head_dim=64, d_ff=7168,
+        vocab_size=65_536, activation="relu2", norm="layernorm",
+        layer_pattern=("rwkv6",), use_rope=True,  # rwkv ignores positions
+        citation="arXiv:2404.05892 (RWKV-6 Finch)")

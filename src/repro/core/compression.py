@@ -1,0 +1,89 @@
+"""Knowledge/activation compression — the paper's SSIV.B.2 / SSIV.C.2
+research directions, implemented as first-class features:
+
+- top-k logit sparsification (generative KD: keep k << V predictions)
+- int8/int4 symmetric per-row quantization (logits, activations, grads)
+- softened-label compression (temperature + float16)
+Each returns (compressed, meta) plus exact wire-size accounting, and a
+``decompress`` that reconstructs the dense tensor the receiver trains on.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_FILL = -1e9
+
+
+# --------------------------------------------------------------------------- #
+# Top-k logits (SSIV.B.2)
+# --------------------------------------------------------------------------- #
+def topk_compress(logits: jax.Array, k: int):
+    """logits (..., V) -> ({"values","indices"}, wire_bytes)."""
+    vals, idx = jax.lax.top_k(logits, k)
+    wire = vals.size * 4 + idx.size * 4
+    return {"values": vals, "indices": idx, "dim": logits.shape[-1]}, wire
+
+
+def topk_decompress(comp) -> jax.Array:
+    """Reconstruct dense logits; missing entries get a large negative value
+    so softmax mass matches the transmitted top-k support."""
+    vals, idx = comp["values"], comp["indices"]
+    shape = vals.shape[:-1] + (comp["dim"],)
+    dense = jnp.full(shape, NEG_FILL, vals.dtype)
+    return _scatter_last(dense, idx, vals)
+
+
+def _scatter_last(dense, idx, vals):
+    flat_dense = dense.reshape(-1, dense.shape[-1])
+    flat_idx = idx.reshape(-1, idx.shape[-1])
+    flat_vals = vals.reshape(-1, vals.shape[-1])
+    rows = jnp.arange(flat_dense.shape[0])[:, None]
+    out = flat_dense.at[rows, flat_idx].set(flat_vals)
+    return out.reshape(dense.shape)
+
+
+# --------------------------------------------------------------------------- #
+# Symmetric per-row quantization (SSIV.C.2)
+# --------------------------------------------------------------------------- #
+def quantize(x: jax.Array, bits: int = 8):
+    """(..., d) -> ({"q", "scale"}, wire_bytes).  Per-row absmax scaling.
+    The pure-jnp reference for kernels/quantize.py."""
+    assert bits in (4, 8)
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    q = q.astype(jnp.int8)
+    n_rows = 1
+    for s in x.shape[:-1]:
+        n_rows *= s
+    wire = x.size * bits // 8 + n_rows * 4          # payload + row scales
+    return {"q": q, "scale": scale.astype(jnp.float32)}, int(wire)
+
+
+def dequantize(comp) -> jax.Array:
+    return comp["q"].astype(jnp.float32) * comp["scale"]
+
+
+def quant_roundtrip(x: jax.Array, bits: int = 8):
+    """Straight-through quantize->dequantize with wire-size accounting."""
+    comp, wire = quantize(x, bits)
+    return dequantize(comp).astype(x.dtype), wire
+
+
+# --------------------------------------------------------------------------- #
+# Softened labels (SSIV.B.2 "knowledge compression")
+# --------------------------------------------------------------------------- #
+def soften(logits: jax.Array, temperature: float = 2.0):
+    """Temperature-softened probabilities in fp16 (half the wire size)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+    return p.astype(jnp.float16), p.size * 2
+
+
+def soft_to_logits(soft_p: jax.Array, temperature: float = 2.0):
+    """Invert to (scaled) logits for the KD loss: T * log p."""
+    return temperature * jnp.log(
+        jnp.maximum(soft_p.astype(jnp.float32), 1e-8))

@@ -1,0 +1,136 @@
+"""FedLLMs — the paper's foundational framework (SSII.A):
+
+    a1 server -> clients: global tunable (LoRA) parameters
+    a2 client: local PEFT fine-tuning on private data
+    a3 clients -> server: fine-tuned tunable parameters
+    a4 server: aggregation (FedAvg) -> next global parameters
+
+This module also provides the jitted train/eval/logit steps shared by all
+three frameworks (they differ in *what* is exchanged, not in how a local
+step runs).  The base model is a closed-over constant of the loss, so
+gradients exist only for the LoRA tree — the PEFT property (paper fn.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig
+from repro.core import tasks
+from repro.models.factory import Model
+from repro.optim.api import make_optimizer
+from repro.peft import lora as lora_lib
+
+
+def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
+    """Returns dict of jitted fns: train_step, eval_step, logits_fn,
+    kd_step (distill to teacher logits)."""
+    cfg = model.cfg
+    task_loss = tasks.get_loss_fn(task)
+    opt_init, opt_update = make_optimizer(fed.optimizer)
+
+    def _bind(base, lt, rng=None):
+        rank = _tree_rank(lt, fed.lora_rank)
+        return lora_lib.bind(base, lt, fed.lora_alpha, rank,
+                             dropout_mask_rng=rng, dropout=fed.lora_dropout)
+
+    @jax.jit
+    def train_step(base, lt, opt_state, batch, rng):
+        def loss_fn(l):
+            bound = _bind(base, l, rng)
+            logits, aux = model.forward(bound, batch)
+            loss, _ = task_loss(logits, batch)
+            return loss + aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(lt)
+        new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
+        return new_lt, new_opt, loss
+
+    @jax.jit
+    def eval_step(base, lt, batch):
+        bound = _bind(base, lt)
+        logits, _ = model.forward(bound, batch)
+        if task == "classification":
+            acc = tasks.classification_accuracy(logits, batch)
+        else:
+            acc = -task_loss(logits, batch)[0]
+        loss, _ = task_loss(logits, batch)
+        return acc, loss
+
+    @jax.jit
+    def logits_fn(base, lt, batch):
+        """Knowledge representation for KD (paper b2/b6): class logits for
+        classification, full LM logits for generative tasks."""
+        bound = _bind(base, lt)
+        logits, _ = model.forward(bound, batch)
+        if task == "classification":
+            return tasks.class_logits(logits, batch)
+        return logits
+
+    @jax.jit
+    def kd_step(base, lt, opt_state, batch, teacher_logits, rng):
+        """Distill ``teacher_logits`` into the student's LoRA params."""
+        from repro.models import loss as losses
+
+        def loss_fn(l):
+            bound = _bind(base, l, rng)
+            logits, aux = model.forward(bound, batch)
+            if task == "classification":
+                student = tasks.class_logits(logits, batch)
+            else:
+                student = logits
+            return losses.kd_kl(student, teacher_logits,
+                                fed.kd_temperature) + aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(lt)
+        new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
+        return new_lt, new_opt, loss
+
+    return {"train_step": train_step, "eval_step": eval_step,
+            "logits_fn": logits_fn, "kd_step": kd_step,
+            "opt_init": opt_init, "opt_update": opt_update,
+            "bind": _bind}
+
+
+def _tree_rank(lt, default: int) -> int:
+    for leaf in jax.tree.leaves(lt):
+        if leaf.ndim >= 2:
+            return leaf.shape[-1] if leaf.shape[-1] != 0 else default
+    return default
+
+
+# --------------------------------------------------------------------------- #
+# Aggregation (a4)
+# --------------------------------------------------------------------------- #
+def fedavg(trees: Sequence, weights: Optional[Sequence[float]] = None):
+    """Weighted FedAvg of identically-structured pytrees."""
+    if weights is None:
+        weights = [1.0] * len(trees)
+    total = float(sum(weights))
+    ws = [w / total for w in weights]
+
+    def mean(*leaves):
+        out = leaves[0].astype(jnp.float32) * ws[0]
+        for w, leaf in zip(ws[1:], leaves[1:]):
+            out = out + leaf.astype(jnp.float32) * w
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(mean, *trees)
+
+
+def evaluate(fns, base, lt, data: Dict, batch_size: int = 64) -> tuple:
+    """Mean accuracy/loss over a dataset."""
+    from repro.data.loader import epoch_batches
+    accs, losses_, n = [], [], 0
+    for batch in epoch_batches(data, batch_size, seed=0):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        a, l = fns["eval_step"](base, lt, jb)
+        accs.append(float(a) * len(batch["tokens"]))
+        losses_.append(float(l) * len(batch["tokens"]))
+        n += len(batch["tokens"])
+    if n == 0:
+        return 0.0, 0.0
+    return sum(accs) / n, sum(losses_) / n

@@ -1,0 +1,126 @@
+"""KD-FedLLMs — logit-based knowledge sharing (paper SSII.B):
+
+    b1 client: local fine-tuning on private data
+    b2 client: logits on the PUBLIC dataset with the fine-tuned model
+    b3 clients -> server: logits (optionally top-k / int8 compressed)
+    b4 server: knowledge processing (weighted/filtered aggregation)
+    b5 server: distillation -> global model update
+    b6 server: global logits on the public dataset
+    b7 server -> clients: global logits
+    b8 client: local KD against the global knowledge
+
+No parameters cross the network — communication scales with
+|public dataset| x logit dim (paper SSIII.B), which is why this framework
+wins for classification and loses for generative tasks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import compression, metrics
+from repro.data.loader import epoch_batches
+
+
+def client_logits(fns, base, lt, public: Dict, batch_size: int = 64):
+    """b2: knowledge representations on the public dataset."""
+    outs = []
+    for batch in epoch_batches(public, batch_size, seed=0,
+                               drop_remainder=False):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        outs.append(np.asarray(fns["logits_fn"](base, lt, jb)))
+    return np.concatenate(outs, axis=0)
+
+
+def compress_for_wire(logits: np.ndarray, fed: FedConfig):
+    """b3 compression (SSIV.B.2 features).  Returns (logits', wire_bytes)."""
+    x = jnp.asarray(logits)
+    if fed.logit_topk and fed.logit_topk < logits.shape[-1]:
+        comp, wire = compression.topk_compress(x, fed.logit_topk)
+        return np.asarray(compression.topk_decompress(comp)), wire
+    if fed.logit_quant_bits:
+        deq, wire = compression.quant_roundtrip(x, fed.logit_quant_bits)
+        return np.asarray(deq), wire
+    return logits, logits.size * 4
+
+
+def aggregate_knowledge(client_logits_list: List[np.ndarray],
+                        weights: Optional[List[float]] = None,
+                        entropy_filter_frac: float = 0.0) -> np.ndarray:
+    """b4: refined global knowledge.  Weighted mean of client logits, with
+    optional entropy-based filtering (SSIV.B.3): samples whose mean
+    predictive entropy is in the highest ``frac`` quantile are replaced by
+    the lowest-entropy client's logits (most-confident knowledge wins)."""
+    if weights is None:
+        weights = [1.0] * len(client_logits_list)
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    stack = np.stack(client_logits_list)                   # (C, N, D)
+    agg = np.einsum("c,cnd->nd", w, stack).astype(np.float32)
+    if entropy_filter_frac > 0.0:
+        ent = _entropy(stack)                              # (C, N)
+        mean_ent = ent.mean(axis=0)
+        thresh = np.quantile(mean_ent, 1.0 - entropy_filter_frac)
+        noisy = mean_ent >= thresh
+        best_client = ent.argmin(axis=0)                   # (N,)
+        chosen = stack[best_client, np.arange(stack.shape[1])]
+        agg[noisy] = chosen[noisy]
+    return agg
+
+
+def _entropy(logits: np.ndarray) -> np.ndarray:
+    x = logits - logits.max(axis=-1, keepdims=True)
+    p = np.exp(x)
+    p /= p.sum(axis=-1, keepdims=True)
+    return -(p * np.log(np.maximum(p, 1e-12))).sum(axis=-1)
+
+
+def distill(fns, base, lt, opt_state, public: Dict, teacher: np.ndarray,
+            epochs: int, batch_size: int = 64, seed: int = 0):
+    """b5/b8: update LoRA params by distilling ``teacher`` logits."""
+    rng = jax.random.PRNGKey(seed)
+    loss = 0.0
+    n = 0
+    for ep in range(epochs):
+        start = 0
+        for batch in epoch_batches(public, batch_size, seed=ep,
+                                   drop_remainder=False):
+            # teacher rows must follow the same permutation
+            sel = _epoch_perm(len(public["tokens"]), ep)[
+                start:start + len(batch["tokens"])]
+            start += len(batch["tokens"])
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            t = jnp.asarray(teacher[sel])
+            rng, sub = jax.random.split(rng)
+            lt, opt_state, l = fns["kd_step"](base, lt, opt_state, jb, t,
+                                              sub)
+            loss += float(l) * len(batch["tokens"])
+            n += len(batch["tokens"])
+    return lt, opt_state, loss / max(n, 1)
+
+
+def _epoch_perm(n: int, seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(n)
+
+
+# --------------------------------------------------------------------------- #
+# Public-dataset alignment (SSIV.B.1 — beyond-paper feature)
+# --------------------------------------------------------------------------- #
+def align_public_dataset(public: Dict, client_label_hists: List[np.ndarray],
+                         target_size: int, seed: int = 0) -> Dict:
+    """Importance-resample the public dataset toward the clients' average
+    label distribution, using only the lightweight histograms clients
+    share (no raw data crosses the network)."""
+    rng = np.random.default_rng(seed)
+    target = np.mean(np.stack(client_label_hists), axis=0)
+    labels = public["labels"]
+    pub_hist = np.bincount(labels, minlength=len(target)).astype(np.float64)
+    pub_hist /= max(pub_hist.sum(), 1.0)
+    w = target[labels] / np.maximum(pub_hist[labels], 1e-9)
+    w /= w.sum()
+    sel = rng.choice(len(labels), size=target_size, replace=True, p=w)
+    return {k: v[sel] for k, v in public.items()}

@@ -1,0 +1,123 @@
+"""Communication- and computation-accounting — the paper's evaluation
+axes (SSIII, Figs. 3-4, Table I), measured by the framework itself.
+
+Every server<->client exchange goes through a ``CommLedger`` so the
+per-client per-round bytes of Fig. 4 fall out of the run, and client-side
+FLOPs are derived from the architecture config with the standard
+transformer estimates (6ND train, 2ND forward; PEFT backward ~ 4ND since
+frozen-weight grads are skipped but activation grads still chain)."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs.base import FedConfig, ModelConfig
+
+UP = "up"          # client -> server
+DOWN = "down"      # server -> client
+
+
+@dataclasses.dataclass
+class CommEvent:
+    round: int
+    client: int
+    name: str            # e.g. "lora_params", "logits", "activations"
+    direction: str
+    bytes: int
+
+
+class CommLedger:
+    def __init__(self):
+        self.events: List[CommEvent] = []
+
+    def record(self, rnd: int, client: int, name: str, direction: str,
+               nbytes: int):
+        self.events.append(CommEvent(rnd, client, name, direction,
+                                     int(nbytes)))
+
+    # -- queries ---------------------------------------------------------
+    def total(self, direction: Optional[str] = None) -> int:
+        return sum(e.bytes for e in self.events
+                   if direction is None or e.direction == direction)
+
+    def per_client_round(self) -> Dict[tuple, int]:
+        out = collections.defaultdict(int)
+        for e in self.events:
+            out[(e.round, e.client)] += e.bytes
+        return dict(out)
+
+    def per_round(self) -> Dict[int, int]:
+        out = collections.defaultdict(int)
+        for e in self.events:
+            out[e.round] += e.bytes
+        return dict(out)
+
+    def by_name(self) -> Dict[str, int]:
+        out = collections.defaultdict(int)
+        for e in self.events:
+            out[e.name] += e.bytes
+        return dict(out)
+
+    def mean_client_bytes_per_round(self) -> float:
+        pcr = self.per_client_round()
+        return sum(pcr.values()) / max(len(pcr), 1)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+# --------------------------------------------------------------------------- #
+# Analytic FLOPs (client-side computation, Fig. 4 right axis)
+# --------------------------------------------------------------------------- #
+def fwd_flops(cfg: ModelConfig, n_tokens: int,
+              frac_layers: float = 1.0) -> float:
+    """2 * N_active * D; ``frac_layers`` scales for split sub-models."""
+    return 2.0 * cfg.active_param_count() * frac_layers * n_tokens
+
+
+def train_flops(cfg: ModelConfig, n_tokens: int, peft: bool = True,
+                n_peft_params: int = 0, frac_layers: float = 1.0) -> float:
+    """Full FT: 6ND.  PEFT: fwd 2ND + activation-grad chain 2ND + PEFT
+    weight grads (6 * n_peft * D) — frozen base weight-grads skipped."""
+    base = cfg.active_param_count() * frac_layers
+    if not peft:
+        return 6.0 * base * n_tokens
+    return (4.0 * base + 6.0 * n_peft_params) * n_tokens
+
+
+@dataclasses.dataclass
+class ClientCost:
+    """Accumulated per-client computation."""
+    flops: float = 0.0
+
+    def add_train(self, cfg, n_tokens, n_peft, frac_layers=1.0):
+        self.flops += train_flops(cfg, n_tokens, True, n_peft, frac_layers)
+
+    def add_fwd(self, cfg, n_tokens, frac_layers=1.0):
+        self.flops += fwd_flops(cfg, n_tokens, frac_layers)
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    accuracy: float
+    loss: float
+    comm_bytes_per_client: float
+    client_flops: float
+
+
+def logit_bytes(n_samples: int, logit_dim: int, topk: int = 0,
+                quant_bits: int = 0) -> int:
+    """Communication size of a logit set (paper SSIII.B: classification vs
+    generative task dimensionality; SSIV.B.2 compression options)."""
+    if topk:
+        per = topk * (4 + 4)                       # value + index
+    elif quant_bits:
+        per = logit_dim * quant_bits // 8 + 4      # + per-row scale
+    else:
+        per = logit_dim * 4
+    return n_samples * per

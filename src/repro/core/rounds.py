@@ -1,0 +1,278 @@
+"""Federated round engine — drives any of the three paper frameworks over
+one shared substrate and records the paper's metrics (accuracy, comm
+bytes, client FLOPs) per round.
+
+    result = run_federated(cfg, fed, model_seed=0, data=..., task=...)
+
+``result.history`` is a list of RoundMetrics; ``result.ledger`` has every
+wire transfer; Fig. 3 / Fig. 4 / Table I benchmarks read from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, ModelConfig
+from repro.core import kd as kd_mod
+from repro.core import metrics as M
+from repro.core import split as split_mod
+from repro.core import tasks
+from repro.core.fedavg import evaluate, fedavg, make_fns
+from repro.core.heterogeneous import aggregate_hetero
+from repro.data import partition as part_mod
+from repro.data.loader import epoch_batches
+from repro.models.factory import build_model
+from repro.peft import lora as lora_lib
+
+
+@dataclasses.dataclass
+class FedResult:
+    history: List[M.RoundMetrics]
+    ledger: M.CommLedger
+    final_lora: Dict
+    client_flops: List[float]
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.history[-1].accuracy if self.history else 0.0
+
+
+def _to_jax(batch):
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
+                  clients_data: List[Dict], test: Dict,
+                  task: str = "classification", batch_size: int = 16,
+                  eval_batch: int = 64, verbose: bool = False) -> FedResult:
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(fed.seed)
+    base = model.init(key)
+    targets = fed.lora_targets or lora_lib.default_targets(cfg)
+
+    if fed.framework == "fedllm":
+        return _run_fedllm(model, base, cfg, fed, targets, clients_data,
+                           test, task, batch_size, eval_batch, verbose)
+    if fed.framework == "kd":
+        return _run_kd(model, base, cfg, fed, targets, public, clients_data,
+                       test, task, batch_size, eval_batch, verbose)
+    if fed.framework == "split":
+        return _run_split(model, base, cfg, fed, targets, clients_data,
+                          test, task, batch_size, eval_batch, verbose)
+    raise ValueError(fed.framework)
+
+
+# --------------------------------------------------------------------------- #
+# 1) FedLLMs (SSII.A)
+# --------------------------------------------------------------------------- #
+def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
+                batch_size, eval_batch, verbose):
+    fns = make_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 1)
+    n_clients = len(clients_data)
+    ranks = list(fed.client_ranks) if fed.client_ranks else \
+        [fed.lora_rank] * n_clients
+    hetero = len(set(ranks)) > 1
+
+    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                   fed.lora_alpha)
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    n_lora = lora_lib.n_params(global_lt)
+
+    for rnd in range(fed.rounds):
+        locals_, weights = [], []
+        for ci, data in enumerate(clients_data):
+            # a1: distribute global params (truncate rank for weak clients)
+            if ranks[ci] != fed.lora_rank:
+                lt = _truncate_rank(global_lt, ranks[ci], fed.lora_rank)
+            else:
+                lt = global_lt
+            ledger.record(rnd, ci, "lora_params", M.DOWN, M.tree_bytes(lt))
+            # a2: local fine-tuning
+            opt = fns["opt_init"](lt)
+            n_tok = 0
+            for ep in range(fed.local_epochs):
+                for batch in epoch_batches(data, batch_size,
+                                           seed=fed.seed * 997 + rnd + ep):
+                    key, sub = jax.random.split(key)
+                    lt, opt, _ = fns["train_step"](base, lt, opt,
+                                                   _to_jax(batch), sub)
+                    n_tok += batch["tokens"].size
+            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(lt))
+            # a3: upload
+            ledger.record(rnd, ci, "lora_params", M.UP, M.tree_bytes(lt))
+            locals_.append(lt)
+            weights.append(len(data["tokens"]))
+        # a4: aggregate
+        if hetero:
+            global_lt = aggregate_hetero(locals_, ranks, fed.lora_alpha,
+                                         fed.lora_rank, weights,
+                                         fed.hetero_agg)
+        else:
+            global_lt = fedavg(locals_, weights)
+        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss,
+            ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[fedllm] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
+    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
+
+
+def _truncate_rank(lt, rank, orig_rank):
+    """Keep the first ``rank`` components, rescaling for bind's alpha/r:
+    the client binds with alpha/rank, the global delta was alpha/orig, so
+    B shrinks by rank/orig to keep the effective delta scale."""
+    gain = rank / orig_rank
+
+    def rec(l):
+        if isinstance(l, dict) and set(l) == {"a", "b"}:
+            return {"a": l["a"][..., :rank], "b": l["b"][..., :rank, :]
+                    * gain}
+        if isinstance(l, dict):
+            return {k: rec(v) for k, v in l.items()}
+        if isinstance(l, (tuple, list)):
+            return tuple(rec(v) if v is not None else None for v in l)
+        return l
+
+    return rec(lt)
+
+
+# --------------------------------------------------------------------------- #
+# 2) KD-FedLLMs (SSII.B)
+# --------------------------------------------------------------------------- #
+def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
+            task, batch_size, eval_batch, verbose):
+    fns = make_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 2)
+    n_clients = len(clients_data)
+    logit_dim = tasks.task_logit_dim(task, cfg.vocab_size)
+
+    client_lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base,
+                                     targets, fed.lora_rank, fed.lora_alpha)
+                  for ci in range(n_clients)]
+    client_opts = [fns["opt_init"](lt) for lt in client_lts]
+    server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
+                                   targets, fed.lora_rank, fed.lora_alpha)
+    server_opt = fns["opt_init"](server_lt)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    pub_tok = public["tokens"].size
+
+    for rnd in range(fed.rounds):
+        uploaded = []
+        weights = []
+        for ci, data in enumerate(clients_data):
+            lt, opt = client_lts[ci], client_opts[ci]
+            # b1: local fine-tuning (params never leave the client)
+            n_tok = 0
+            for ep in range(fed.local_epochs):
+                for batch in epoch_batches(data, batch_size,
+                                           seed=fed.seed * 991 + rnd + ep):
+                    key, sub = jax.random.split(key)
+                    lt, opt, _ = fns["train_step"](base, lt, opt,
+                                                   _to_jax(batch), sub)
+                    n_tok += batch["tokens"].size
+            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(lt))
+            # b2: logits on the public dataset
+            logits = kd_mod.client_logits(fns, base, lt, public, eval_batch)
+            cost[ci].add_fwd(cfg, pub_tok)
+            # b3: upload (with SSIV.B.2 compression if configured)
+            logits, wire = kd_mod.compress_for_wire(logits, fed)
+            ledger.record(rnd, ci, "logits", M.UP, wire)
+            uploaded.append(logits)
+            weights.append(len(data["tokens"]))
+            client_lts[ci], client_opts[ci] = lt, opt
+        # b4: knowledge processing
+        teacher = kd_mod.aggregate_knowledge(uploaded, weights)
+        # b5: server-side distillation into the global model
+        server_lt, server_opt, _ = kd_mod.distill(
+            fns, base, server_lt, server_opt, public, teacher,
+            fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
+        # b6/b7: global logits back to clients
+        glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
+        glob_wire, _ = kd_mod.compress_for_wire(glob, fed)[1], None
+        for ci in range(n_clients):
+            ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
+        # b8: client-side KD
+        for ci in range(n_clients):
+            client_lts[ci], client_opts[ci], _ = kd_mod.distill(
+                fns, base, client_lts[ci], client_opts[ci], public, glob,
+                fed.kd_epochs, eval_batch, seed=fed.seed + 31 * rnd + ci)
+            # KD training pass over the public set
+            cost[ci].add_train(cfg, pub_tok * fed.kd_epochs,
+                               lora_lib.n_params(client_lts[ci]))
+        acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[kd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
+    return FedResult(history, ledger, server_lt,
+                     [c.flops for c in cost])
+
+
+# --------------------------------------------------------------------------- #
+# 3) Split-FedLLMs (SSII.C)
+# --------------------------------------------------------------------------- #
+def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
+               batch_size, eval_batch, verbose):
+    fns = make_fns(model, fed, task)           # for eval on the full model
+    sfns = split_mod.make_split_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 3)
+    n_clients = len(clients_data)
+    L = sfns["n_client_groups"]
+    n_groups = sfns["n_groups"]
+    frac_client = L / max(n_groups, 1)
+
+    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                 fed.lora_alpha)
+    c_global, s_lt = split_mod.split_lora(full_lt, L)
+    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
+    s_opt = sfns["opt_init"](s_lt)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+
+    for rnd in range(fed.rounds):
+        locals_, weights = [], []
+        for ci, data in enumerate(clients_data):
+            c_lt = c_global
+            ledger.record(rnd, ci, "lora_params", M.DOWN,
+                          M.tree_bytes(c_lt))                      # cc3
+            c_opt = sfns["opt_init"](c_lt)
+            n_tok = 0
+            for batch in epoch_batches(data, batch_size,
+                                       seed=fed.seed * 983 + rnd):
+                up, down = sfns["wire_bytes_per_batch"](
+                    batch["tokens"].shape)
+                ledger.record(rnd, ci, "activations", M.UP,
+                              up + batch["labels"].size * 4)        # c2
+                ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
+                key, sub = jax.random.split(key)
+                c_lt, s_lt, c_opt, s_opt, _ = sfns["split_train_step"](
+                    base_c, base_s, c_lt, s_lt, c_opt, s_opt,
+                    _to_jax(batch), sub)
+                n_tok += batch["tokens"].size
+            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(c_lt),
+                               frac_layers=frac_client)
+            ledger.record(rnd, ci, "lora_params", M.UP,
+                          M.tree_bytes(c_lt))                       # cc1
+            locals_.append(c_lt)
+            weights.append(len(data["tokens"]))
+        c_global = fedavg(locals_, weights)                         # cc2
+        joined = split_mod.join_lora(c_global, s_lt)
+        acc, loss = evaluate(fns, base, joined, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[split] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
+    return FedResult(history, ledger, joined, [c.flops for c in cost])

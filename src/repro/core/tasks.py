@@ -1,0 +1,51 @@
+"""Task heads: intent classification (paper case study) and generative LM.
+
+Classification-as-LM: class c's logit is the LM logit of vocab id 1+c at
+the last non-pad position (banking77.py reserves ids [1, 78) as answer
+tokens) — matching GPT-2 classification fine-tuning in the paper."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.banking77 import N_CLASSES
+from repro.models import loss as losses
+
+
+def class_logits(logits: jax.Array, batch: Dict) -> jax.Array:
+    """logits: (B, S', V) -> (B, n_classes) at the last non-pad position."""
+    offset = logits.shape[1] - batch["tokens"].shape[1]   # vlm/prompt prefix
+    pos = offset + batch["lengths"].astype(jnp.int32) - 1  # (B,)
+    g = jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
+    return g[:, 1:1 + N_CLASSES]
+
+
+def classification_loss_fn(logits, batch):
+    cl = class_logits(logits, batch)
+    loss, _ = losses.cross_entropy(cl, batch["labels"])
+    return loss, cl
+
+
+def classification_accuracy(logits, batch) -> jax.Array:
+    cl = class_logits(logits, batch)
+    return losses.accuracy(cl, batch["labels"])
+
+
+def generative_loss_fn(logits, batch):
+    mask = (batch["tokens"] != 0).astype(jnp.float32)
+    offset = logits.shape[1] - batch["tokens"].shape[1]
+    lg = logits[:, offset:]
+    loss, _ = losses.next_token_loss(lg, batch["tokens"], mask)
+    return loss, lg
+
+
+def task_logit_dim(task: str, vocab_size: int) -> int:
+    """Paper SSIII.B: classification logits ~ n_classes; generative ~ V."""
+    return N_CLASSES if task == "classification" else vocab_size
+
+
+def get_loss_fn(task: str):
+    return (classification_loss_fn if task == "classification"
+            else generative_loss_fn)

@@ -1,0 +1,110 @@
+"""Flash attention Pallas TPU kernel: online-softmax blockwise attention
+with causal masking, sliding windows (mixtral/recurrentgemma local
+attention) and GQA via index-mapped KV head sharing.
+
+Layout: q (BH, Sq, D), k/v (BKV, Skv, D) with BH = B*H, BKV = B*KV.
+Grid (BH, nq, nkv), kv innermost; the (bq, D) output accumulator and the
+online-softmax (m, l) statistics live in VMEM scratch across kv steps.
+Fully-masked (q-block, kv-block) pairs are skipped with pl.when — for
+causal attention that's half the work; for a sliding window all blocks
+outside the band.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bkv: int,
+            nkv: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq + q_offset          # absolute position of first query
+    kv_start = ki * bkv
+    # block-level reachability (skip fully-masked tiles)
+    reachable = True
+    if causal:
+        reachable = kv_start <= q_start + bq - 1
+    if window > 0:
+        reachable = jnp.logical_and(
+            reachable, kv_start + bkv - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kv_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "n_q_heads", "bq", "bkv", "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    n_q_heads: int = 0, bq: int = 128, bkv: int = 128,
+                    q_offset: int = 0, interpret: bool = True):
+    """q: (BH, Sq, D); k, v: (BKV, Skv, D).  GQA when BKV < BH: kv head
+    index = bh//G with G = BH//BKV (requires contiguous (b, h) layout).
+
+    Returns (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    nq, nkv = Sq // bq, Skv // bkv
+    kernel = functools.partial(
+        _kernel, scale=D ** -0.5, causal=causal, window=window, bq=bq,
+        bkv=bkv, nkv=nkv, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,107 @@
+"""Model-facing jit'd wrappers around the Pallas kernels: reshape from
+model-layer layouts to kernel layouts, choose block shapes, and select
+interpret mode (Python emulation on CPU; compiled on real TPU).
+
+These are the TPU hot paths; the XLA paths in models/ remain the default
+for CPU execution and for the SPMD dry-run lowering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kd_loss as _kd
+from repro.kernels import lora_matmul as _lm
+from repro.kernels import quantize as _q
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _rw
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def lora_matmul(x, w, a, b, block_m: int = 128, block_k: int = 512,
+                block_n: int = 128):
+    """x: (..., K) -> (..., N) with LoRA fused.  Pads M to the tile."""
+    *lead, K = x.shape
+    M = 1
+    for s in lead:
+        M *= s
+    xf = x.reshape(M, K)
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = _lm.lora_matmul(xf, w, a, b, bm=bm, bk=min(block_k, K),
+                          bn=min(block_n, w.shape[1]), interpret=INTERPRET)
+    if pad:
+        out = out[:M]
+    return out.reshape(*lead, w.shape[1])
+
+
+def mha_attention(q, k, v, causal: bool = True, window: int = 0,
+                  q_offset: int = 0, bq: int = 128, bkv: int = 128):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              q_offset=q_offset, bq=bq, bkv=bkv,
+                              interpret=INTERPRET)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def kd_loss(teacher, student, temperature: float = 1.0, mask=None,
+            br: int = 128, bv: int = 2048):
+    """teacher/student: (..., V) -> scalar mean KD loss (masked)."""
+    V = teacher.shape[-1]
+    t = teacher.reshape(-1, V)
+    s = student.reshape(-1, V)
+    R = t.shape[0]
+    brr = min(br, R)
+    pad = (-R) % brr
+    if pad:
+        t = jnp.pad(t, ((0, pad), (0, 0)))
+        s = jnp.pad(s, ((0, pad), (0, 0)))
+    bvv = bv if V % bv == 0 else V          # fall back to single chunk
+    rows = _kd.kd_loss_rows(t, s, temperature=temperature, br=brr, bv=bvv,
+                            interpret=INTERPRET)[:R, 0]
+    if mask is not None:
+        m = mask.reshape(-1).astype(jnp.float32)
+        return jnp.sum(rows * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(rows)
+
+
+def rglru(a, b, h0, bw: int = 128, bt: int = 128):
+    """a, b: (B, S, W); h0: (B, W) -> (h (B,S,W), h_final)."""
+    W = a.shape[-1]
+    bww = bw if W % bw == 0 else W
+    S = a.shape[1]
+    btt = bt if S % bt == 0 else S
+    return _rg.rglru_scan(a, b, h0, bw=bww, bt=btt, interpret=INTERPRET)
+
+
+def rwkv6(r, k, v, logw, u, bt: int = 64):
+    """(B, S, H, D) layout + u (H, D) -> (y (B,S,H,D), S_f (B,H,D,D))."""
+    B, S, H, D = r.shape
+    flat = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    uf = jnp.tile(u, (B, 1))
+    btt = bt if S % bt == 0 else S
+    y, Sf = _rw.rwkv6_scan(flat(r), flat(k), flat(v), flat(logw), uf,
+                           bt=btt, interpret=INTERPRET)
+    return (y.reshape(B, H, S, D).transpose(0, 2, 1, 3),
+            Sf.reshape(B, H, D, D))
+
+
+def quantize(x, bits: int = 8, br: int = 8):
+    """x: (..., C) -> (q int8, scale fp32 (..., 1))."""
+    *lead, C = x.shape
+    R = 1
+    for s in lead:
+        R *= s
+    xf = x.reshape(R, C)
+    brr = br if R % br == 0 else 1
+    q, sc = _q.quantize_rows(xf, bits=bits, br=brr, interpret=INTERPRET)
+    return q.reshape(*lead, C), sc.reshape(*lead, 1)

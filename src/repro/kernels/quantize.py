@@ -1,0 +1,42 @@
+"""Per-row symmetric int8 quantization Pallas TPU kernel — the wire
+format of Split-FedLLM activation/gradient transfer (paper SSIV.C.2).
+
+One pass: per-row absmax -> scale -> rounded int8 payload.  Grid over
+row blocks; whole feature dim per block (d_model <= 18432 fits VMEM
+comfortably at (8, d) fp32 tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "br", "interpret"))
+def quantize_rows(x, *, bits: int = 8, br: int = 8, interpret: bool = True):
+    """x: (R, C) -> (q int8 (R, C), scale fp32 (R, 1))."""
+    R, C = x.shape
+    br = min(br, R)
+    assert R % br == 0
+    qmax = float((1 << (bits - 1)) - 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

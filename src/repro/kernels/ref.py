@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets of the
+per-kernel test sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b):
+    x32 = x.astype(jnp.float32)
+    return (x32 @ w.astype(jnp.float32)
+            + (x32 @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q: (BH, Sq, D); k,v: (BKV, Skv, D); GQA by head-group repeat."""
+    BH, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    k = jnp.repeat(k, G, axis=0)
+    v = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    if window > 0:
+        mask = mask & (kv_pos > q_pos - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def kd_loss_rows_ref(teacher, student, temperature: float = 1.0):
+    """Per-row KL(softmax(t/T) || softmax(s/T)) * T^2 -> (R, 1)."""
+    t = teacher.astype(jnp.float32) / temperature
+    s = student.astype(jnp.float32) / temperature
+    tp = jax.nn.log_softmax(t, axis=-1)
+    sp = jax.nn.log_softmax(s, axis=-1)
+    kl = jnp.sum(jnp.exp(tp) * (tp - sp), axis=-1, keepdims=True)
+    return kl * (temperature ** 2)
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t*h_{t-1} + b_t via lax.scan.  Returns (h_all, h_final)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32 = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b32 = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    hf, hs = jax.lax.scan(step, h0.astype(jnp.float32), (a32, b32))
+    return jnp.moveaxis(hs, 0, 1), hf
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """Direct per-(batch*head) scan oracle, (BH, S, D) layout."""
+
+    def one(rb, kb, vb, lwb, ub):
+        def step(S, inp):
+            r_, k_, v_, lw_ = inp
+            kv = k_[:, None] * v_[None, :]
+            y = r_ @ (S + ub[:, None] * kv)
+            return jnp.exp(lw_)[:, None] * S + kv, y
+
+        D = rb.shape[-1]
+        Sf, ys = jax.lax.scan(step, jnp.zeros((D, D), jnp.float32),
+                              (rb, kb, vb, lwb))
+        return ys, Sf
+
+    f32 = lambda x: x.astype(jnp.float32)
+    return jax.vmap(one)(f32(r), f32(k), f32(v), f32(logw), f32(u))
+
+
+def quantize_rows_ref(x, bits: int = 8):
+    qmax = float((1 << (bits - 1)) - 1)
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,144 @@
+"""Multi-pod dry-run (charter deliverable e): lower + compile every
+(architecture x input-shape) combination against the production meshes
+and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k [--multi-pod] [--step auto|train|prefill|decode|fed_round]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+
+The XLA_FLAGS line below MUST run before any other jax-importing code:
+jax locks the device count at first backend init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.registry import ARCHS, get_config          # noqa: E402
+from repro.configs.shapes import SHAPES, shape_supported, skip_reason  # noqa: E402
+from repro.launch import steps as steps_mod                   # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.models import common                               # noqa: E402
+from repro.roofline import collectives as coll_mod            # noqa: E402
+
+GiB = 2**30
+
+ASSIGNED = [a for a in ARCHS if not a.startswith("gpt2")]
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            step: str = "auto", remat: str = "full",
+            scan_layers: bool = True, verbose: bool = True,
+            parse_collectives: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "step": shape.mode if step == "auto" else step}
+    if step == "auto" and not shape_supported(cfg, shape):
+        rec["status"] = "SKIP"
+        rec["reason"] = skip_reason(cfg, shape)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        common.enable_shard_hints(True)
+        try:
+            if step == "fed_round":
+                fn, args, shardings = steps_mod.build_fed_round_step(
+                    cfg, shape, mesh, remat=remat)
+            else:
+                fn, args, shardings = steps_mod.build_step(
+                    cfg, shape, mesh, scan_layers=scan_layers, remat=remat)
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            t_low = time.time() - t0
+            compiled = lowered.compile()
+            t_comp = time.time() - t0 - t_low
+        finally:
+            common.enable_shard_hints(False)
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        rec.update({
+            "status": "OK",
+            "lower_s": round(t_low, 2),
+            "compile_s": round(t_comp, 2),
+            "arg_gib_per_dev": round(ma.argument_size_in_bytes / GiB, 3),
+            "temp_gib_per_dev": round(ma.temp_size_in_bytes / GiB, 3),
+            "out_gib_per_dev": round(ma.output_size_in_bytes / GiB, 3),
+            "hlo_flops": ca.get("flops", 0.0),
+            "hlo_bytes": ca.get("bytes accessed", 0.0),
+        })
+        if parse_collectives:
+            try:
+                text = compiled.as_text()
+                cb = coll_mod.collective_bytes(text)
+                rec["collective_bytes"] = cb
+                rec["collective_total"] = sum(cb.values())
+            except Exception as e:                     # pragma: no cover
+                rec["collective_error"] = str(e)
+    if verbose:
+        print(f"[{rec['status']}] {arch} x {shape_name} ({rec['mesh']}, "
+              f"{rec['step']}): compile={rec.get('compile_s', '-')}s "
+              f"args={rec.get('arg_gib_per_dev', '-')}GiB "
+              f"temp={rec.get('temp_gib_per_dev', '-')}GiB "
+              f"coll={rec.get('collective_total', 0)/1e9:.2f}GB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (assigned arch x shape), both meshes")
+    ap.add_argument("--step", default="auto",
+                    choices=["auto", "train", "prefill", "decode",
+                             "fed_round"])
+    ap.add_argument("--remat", default="full", choices=["none", "full"])
+    ap.add_argument("--no-scan", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    records = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape_name in SHAPES:
+                for mp in (False, True):
+                    records.append(run_one(arch, shape_name, mp,
+                                           remat=args.remat,
+                                           scan_layers=not args.no_scan))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for mp in meshes:
+            records.append(run_one(args.arch, args.shape, mp,
+                                   step=args.step, remat=args.remat,
+                                   scan_layers=not args.no_scan))
+
+    ok = sum(r["status"] == "OK" for r in records)
+    skip = sum(r["status"] == "SKIP" for r in records)
+    print(f"\n{ok} OK, {skip} SKIP(policy), {len(records)-ok-skip} FAIL "
+          f"of {len(records)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    if len(records) - ok - skip:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh factories (charter: MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants — importing this module never
+touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+(v5e pod); multi-pod adds a leading ``pod`` axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes the global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]

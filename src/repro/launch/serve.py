@@ -1,0 +1,77 @@
+"""Runnable serving driver: batched autoregressive decode with the KV /
+recurrent cache for any --arch (reduced by default).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models.factory import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-tiny", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size and not args.arch.startswith("gpt2"):
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                (B, args.prompt_len), 1, cfg.vocab_size,
+                                jnp.int32)
+    batch = {"tokens": prompt}
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.encoder_seq_len,
+                                         cfg.d_model))
+    cache = model.init_cache(params, B, max_len, batch, dtype=jnp.float32)
+
+    step = jax.jit(model.decode_step)
+    # prefill by single-step decode (teacher forcing over the prompt)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t], jnp.asarray(t))
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for t in range(args.prompt_len, max_len):
+        out.append(np.asarray(tok))
+        key, sub = jax.random.split(key)
+        logits, cache = step(params, cache, tok, jnp.asarray(t))
+        if args.temperature > 0:
+            tok = jax.random.categorical(
+                sub, logits / args.temperature).astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dt = time.time() - t0
+    gen = np.stack(out, 1)
+    print(f"arch={cfg.name}: generated {gen.shape} tokens in {dt:.2f}s "
+          f"({B*args.gen/dt:.1f} tok/s batched)")
+    print("sample:", gen[0][:16].tolist())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

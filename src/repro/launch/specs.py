@@ -1,0 +1,55 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input
+(charter MULTI-POD DRY-RUN step 2) — weak-type-correct, shardable, no
+device allocation.  Modality frontends are stubs: VLM patch embeddings
+and audio frame embeddings arrive as precomputed arrays of the right
+shape."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    GB, S = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.n_image_tokens:
+        # image prefix consumes part of the context budget (anyres tiling)
+        S_text = S - cfg.n_image_tokens
+        out["img_embeds"] = SDS((GB, cfg.n_image_tokens,
+                                 cfg.image_embed_dim), jnp.bfloat16)
+        out["tokens"] = SDS((GB, S_text), jnp.int32)
+    elif cfg.is_encoder_decoder:
+        out["enc_embeds"] = SDS((GB, cfg.encoder_seq_len, cfg.d_model),
+                                jnp.bfloat16)
+        out["tokens"] = SDS((GB, S), jnp.int32)
+    else:
+        out["tokens"] = SDS((GB, S), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """One new token against a seq_len-deep KV cache."""
+    GB = shape.global_batch
+    return {"token": SDS((GB,), jnp.int32), "pos": SDS((), jnp.int32)}
+
+
+def abstract_cache(model, params_shape, shape: ShapeConfig,
+                   dtype=jnp.bfloat16):
+    """Cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    cfg = model.cfg
+    GB = shape.global_batch
+
+    def make(params):
+        batch = None
+        if cfg.is_encoder_decoder:
+            batch = {"enc_embeds": jnp.zeros(
+                (GB, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)}
+        return model.init_cache(params, GB, shape.seq_len, batch, dtype)
+
+    return jax.eval_shape(make, params_shape)

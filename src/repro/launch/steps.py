@@ -1,0 +1,165 @@
+"""Step builders for the dry-run and launchers: paper-faithful LoRA
+train_step, prefill_step, serve (decode) step, and the multi-pod
+fed_round step.  Each returns (fn, example_args, in_shardings)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import fed_spmd
+from repro.configs.base import FedConfig
+from repro.launch import specs as specs_mod
+from repro.launch.sharding import ShardingPolicy
+from repro.core import tasks
+from repro.models import loss as losses
+from repro.models.factory import build_model
+from repro.optim import adam
+from repro.peft import lora as lora_lib
+
+LORA_RANK = 8
+LORA_ALPHA = 32.0
+
+
+def _named(policy, spec_tree):
+    return jax.tree.map(lambda s: policy.named(s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     remat: str = "full", scan_layers: bool = True,
+                     lora_rank: int = LORA_RANK, peft: bool = True):
+    """Paper-faithful local fine-tune step: LoRA-only gradients, frozen
+    base closed over as an argument (donated in production)."""
+    model = build_model(cfg)
+    policy = ShardingPolicy(mesh, cfg)
+    params_shape = model.init_abstract(dtype=jnp.bfloat16)
+    targets = lora_lib.default_targets(cfg)
+    lt_shape = jax.eval_shape(
+        lambda: lora_lib.init_lora(jax.random.PRNGKey(0), params_shape,
+                                   targets, lora_rank))
+    opt_shape = jax.eval_shape(adam.init, lt_shape)
+    batch_shape = specs_mod.train_input_specs(cfg, shape)
+
+    param_sh = policy.tree_shardings(params_shape)
+    lt_sh = policy.tree_shardings(lt_shape)
+    opt_sh = {"m": lt_sh, "v": lt_sh,
+              "step": policy.named(P())}
+    batch_sh = _named(policy, policy.batch_spec(batch_shape))
+
+    def train_step(base, lt, opt, batch):
+        def loss_fn(l):
+            bound = lora_lib.bind(base, l, LORA_ALPHA, lora_rank)
+            logits, aux = model.forward(bound, batch,
+                                        scan_layers=scan_layers,
+                                        remat=remat)
+            # offset-aware LM loss (VLM image prefix shifts positions)
+            loss, _ = tasks.generative_loss_fn(logits, batch)
+            return loss + aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(lt)
+        new_lt, new_opt = adam.update(grads, opt, lt, 1e-4)
+        return new_lt, new_opt, loss
+
+    args = (params_shape, lt_shape, opt_shape, batch_shape)
+    shardings = (param_sh, lt_sh, opt_sh, batch_sh)
+    return train_step, args, shardings
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       scan_layers: bool = True):
+    """Inference prefill: full-sequence forward, last-position logits."""
+    model = build_model(cfg)
+    policy = ShardingPolicy(mesh, cfg)
+    params_shape = model.init_abstract(dtype=jnp.bfloat16)
+    batch_shape = specs_mod.train_input_specs(cfg, shape)
+    param_sh = policy.tree_shardings(params_shape)
+    batch_sh = _named(policy, policy.batch_spec(batch_shape))
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, scan_layers=scan_layers)
+        return logits[:, -1, :]
+
+    return prefill_step, (params_shape, batch_shape), (param_sh, batch_sh)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      scan_layers: bool = True):
+    """Serve step: ONE new token against a seq_len-deep KV cache."""
+    model = build_model(cfg)
+    policy = ShardingPolicy(mesh, cfg)
+    params_shape = model.init_abstract(dtype=jnp.bfloat16)
+    cache_shape = specs_mod.abstract_cache(model, params_shape, shape)
+    io = specs_mod.decode_input_specs(cfg, shape)
+    param_sh = policy.tree_shardings(params_shape)
+    cache_sh = policy.cache_shardings(cache_shape)
+    GB = shape.global_batch
+    tok_spec = P(policy.dp) if GB % max(policy.dp_size, 1) == 0 else P()
+    tok_sh = policy.named(tok_spec)
+    pos_sh = policy.named(P())
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    args = (params_shape, cache_shape, io["token"], io["pos"])
+    shardings = (param_sh, cache_sh, tok_sh, pos_sh)
+    return serve_step, args, shardings
+
+
+def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         n_clients: int = 2, n_local_steps: int = 1,
+                         remat: str = "full", lora_rank: int = LORA_RANK):
+    """Multi-pod federated round: clients on the ``pod`` axis, FedAvg as a
+    cross-pod all-reduce (DESIGN SS2, core/fed_spmd.py)."""
+    model = build_model(cfg)
+    policy = ShardingPolicy(mesh, cfg)
+    params_shape = model.init_abstract(dtype=jnp.bfloat16)
+    targets = lora_lib.default_targets(cfg)
+    lt_shape = jax.eval_shape(
+        lambda: lora_lib.init_lora(jax.random.PRNGKey(0), params_shape,
+                                   targets, lora_rank))
+    opt_shape = jax.eval_shape(adam.init, lt_shape)
+    # stack on the client axis
+    stack = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), t)
+    slt_shape, sopt_shape = stack(lt_shape), stack(opt_shape)
+    per_client_batch = shape.global_batch // n_clients
+    batch_shape = {"tokens": jax.ShapeDtypeStruct(
+        (n_clients, n_local_steps, per_client_batch, shape.seq_len),
+        jnp.int32)}
+
+    fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA)
+    round_step = fed_spmd.make_spmd_round(model, fed, task="generative")
+
+    param_sh = policy.tree_shardings(params_shape)
+    pod = ("pod",) if "pod" in mesh.axis_names else ()
+    client_spec = lambda x: policy.named(
+        P(pod, *([None] * x.ndim)))
+    slt_sh = jax.tree.map(client_spec, lt_shape)
+    sopt_sh = jax.tree.map(client_spec, opt_shape)
+    batch_sh = {"tokens": policy.named(P(pod, None, ("data",), None))}
+    args = (params_shape, slt_shape, sopt_shape, batch_shape)
+    shardings = (param_sh, slt_sh, sopt_sh, batch_sh)
+    return round_step, args, shardings
+
+
+BUILDERS = {
+    "train": build_train_step,
+    "prefill": build_prefill_step,
+    "decode": build_decode_step,
+}
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               scan_layers: bool = True, remat: str = "full"):
+    """Dispatch on the shape's mode."""
+    if shape.mode == "train":
+        return build_train_step(cfg, shape, mesh, remat=remat,
+                                scan_layers=scan_layers)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg, shape, mesh, scan_layers=scan_layers)
+    return build_decode_step(cfg, shape, mesh, scan_layers=scan_layers)

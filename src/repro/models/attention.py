@@ -1,0 +1,227 @@
+"""Grouped-query attention with optional sliding window, qk-norm, QKV bias,
+RoPE, KV caching (decode) and cross-attention (encoder-decoder).
+
+Long sequences use a q-chunked ``lax.scan`` so the compiled program's live
+score tensor is (B, H, chunk, S) rather than (B, H, S, S) — this is the
+XLA path; the Pallas flash kernel (kernels/flash_attention.py) is the
+TPU-target hot path validated against ref.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import NEG_INF, apply_rope, hint, mm
+
+Q_CHUNK = 512          # q-chunk length above which we scan over q blocks
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def init_attention(key, cfg: ModelConfig, cross: bool = False,
+                   dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, h * hd), dtype),
+        "wk": common.dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": common.dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": common.dense_init(ks[3], (h * hd, d), dtype,
+                                scale=(h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Core attend
+# --------------------------------------------------------------------------- #
+def _attend(q, k, v, mask) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D); mask: (Sq,Skv) or None.
+
+    GQA via head-group reshape; fp32 softmax.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores * (D ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _attend_chunked(q, k, v, q_offset: int, window: int) -> jax.Array:
+    """Causal (optionally windowed) attention with q-chunked scan."""
+    B, Sq, H, D = q.shape
+    n_chunks = Sq // Q_CHUNK
+    rem = Sq % Q_CHUNK
+
+    def body(_, qc_and_idx):
+        qc, idx = qc_and_idx
+        mask = common.causal_mask(qc.shape[1], k.shape[1],
+                                  q_offset=q_offset + idx * Q_CHUNK,
+                                  window=window)
+        return None, _attend(qc, k, v, mask)
+
+    if n_chunks:
+        qs = q[:, : n_chunks * Q_CHUNK].reshape(B, n_chunks, Q_CHUNK, H, D)
+        qs = jnp.moveaxis(qs, 1, 0)                   # (n, B, C, H, D)
+        _, outs = jax.lax.scan(body, None,
+                               (qs, jnp.arange(n_chunks)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, n_chunks * Q_CHUNK, H, D)
+    else:
+        out = jnp.zeros((B, 0, H, D), q.dtype)
+    if rem:
+        mask = common.causal_mask(rem, k.shape[1],
+                                  q_offset=q_offset + n_chunks * Q_CHUNK,
+                                  window=window)
+        out = jnp.concatenate([out, _attend(q[:, n_chunks * Q_CHUNK:],
+                                            k, v, mask)], axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def attention_fwd(params, cfg: ModelConfig, x, positions,
+                  window: int = 0, use_rope: Optional[bool] = None):
+    """x: (B,S,d) -> (B,S,d).  ``window``>0 -> sliding-window attention."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = mm(x, params["wq"])
+    k = mm(x, params["wk"])
+    v = mm(x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"].astype(q.dtype), \
+            k + params["bk"].astype(k.dtype), v + params["bv"].astype(v.dtype)
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if "q_norm" in params:
+        q = common.rmsnorm({"scale": params["q_norm"]}, q)
+        k = common.rmsnorm({"scale": params["k_norm"]}, k)
+    rope = cfg.use_rope if use_rope is None else use_rope
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = hint(q, ("pod", "data"), None, "model", None)
+    k = hint(k, ("pod", "data"), None, None, None)
+    if S > Q_CHUNK:
+        out = _attend_chunked(q, k, v, 0, window)
+    else:
+        out = _attend(q, k, v, common.causal_mask(S, S, window=window))
+    out = out.reshape(B, S, h * hd)
+    return mm(out, params["wo"])
+
+
+def attention_fwd_noncausal(params, cfg: ModelConfig, x, positions):
+    """Bidirectional self-attention (whisper encoder)."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = mm(x, params["wq"]).reshape(B, S, h, hd)
+    k = mm(x, params["wk"]).reshape(B, S, kv, hd)
+    v = mm(x, params["wv"]).reshape(B, S, kv, hd)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = _attend(q, k, v, None)
+    return mm(out.reshape(B, S, h * hd), params["wo"])
+
+
+def cross_attention_fwd(params, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention.  enc_kv = (k, v) precomputed (B,Se,KV,D)."""
+    B, S, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = mm(x, params["wq"]).reshape(B, S, h, hd)
+    k, v = enc_kv
+    out = _attend(q, k, v, None)
+    return mm(out.reshape(B, S, h * hd), params["wo"])
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_out):
+    """Project encoder output once into cross-attn K/V."""
+    B, Se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = mm(enc_out, params["wk"]).reshape(B, Se, kv, hd)
+    v = mm(enc_out, params["wv"]).reshape(B, Se, kv, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------- #
+# KV cache (decode)
+# --------------------------------------------------------------------------- #
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: int = 0, dtype=jnp.bfloat16):
+    """Ring-buffer cache when windowed; linear cache otherwise."""
+    size = min(max_len, window) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache, pos,
+                     window: int = 0, use_rope: Optional[bool] = None):
+    """One-token decode.  x: (B,1,d); pos: scalar int32 absolute position.
+
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = mm(x, params["wq"])
+    k = mm(x, params["wk"])
+    v = mm(x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"].astype(q.dtype), \
+            k + params["bk"].astype(k.dtype), v + params["bv"].astype(v.dtype)
+    q = q.reshape(B, 1, h, hd)
+    k = k.reshape(B, 1, kv, hd)
+    v = v.reshape(B, 1, kv, hd)
+    if "q_norm" in params:
+        q = common.rmsnorm({"scale": params["q_norm"]}, q)
+        k = common.rmsnorm({"scale": params["k_norm"]}, k)
+    rope = cfg.use_rope if use_rope is None else use_rope
+    if rope:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % size, jnp.minimum(pos, size - 1))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    # validity: linear -> idx <= pos; ring -> all slots written once full
+    idx = jnp.arange(size)
+    if window:
+        valid = idx < jnp.minimum(pos + 1, size)
+    else:
+        valid = idx <= pos
+    G = h // kv
+    qr = q.reshape(B, 1, kv, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr,
+                        ck.astype(qr.dtype)).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(cv.dtype),
+                     cv.astype(qr.dtype))
+    out = out.reshape(B, 1, h * hd)
+    return mm(out, params["wo"]), {"k": ck, "v": cv}

@@ -1,0 +1,186 @@
+"""Shared model building blocks: norms, RoPE, activations, initializers,
+and mesh-aware sharding hints.
+
+All models are *functional*: parameters are nested dicts of jnp arrays,
+``init_*`` builds them from a PRNG key, ``apply``-style functions are pure.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------- #
+# Sharding hints
+# --------------------------------------------------------------------------- #
+_HINTS_ENABLED = False
+
+
+def enable_shard_hints(on: bool = True) -> None:
+    global _HINTS_ENABLED
+    _HINTS_ENABLED = on
+
+
+@contextlib.contextmanager
+def shard_hints(on: bool = True):
+    global _HINTS_ENABLED
+    prev = _HINTS_ENABLED
+    _HINTS_ENABLED = on
+    try:
+        yield
+    finally:
+        _HINTS_ENABLED = prev
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint when a mesh is ambient; no-op otherwise."""
+    if not _HINTS_ENABLED:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:                                     # no mesh / bad axes
+        return x
+
+
+# --------------------------------------------------------------------------- #
+# Initializers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (LLM default)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(
+        d, dtype)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# --------------------------------------------------------------------------- #
+# Activations
+# --------------------------------------------------------------------------- #
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def relu2(x):
+    """Squared ReLU (Nemotron-4)."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                            # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                           # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n_pos, d)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2 - 1 + 1e-9))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# LoRA-aware matmul
+# --------------------------------------------------------------------------- #
+def mm(x: jax.Array, w) -> jax.Array:
+    """Projection that accepts either a plain weight array or a LoRA-bound
+    leaf ``{"w": W, "a": A, "b": B}`` (scale and dropout mask are folded
+    into a/b at bind time so every leaf is a plain array — required for
+    scan-over-stacked-layers).
+
+    The LoRA path computes ``x@W + (x@A)@B`` without materializing
+    ``W + BA`` — gradients flow to A/B only when W is a closed-over constant
+    (see core/fedavg.train_step).  The Pallas ``lora_matmul`` kernel fuses
+    exactly this computation for the TPU hot path (kernels/lora_matmul.py).
+    """
+    if isinstance(w, dict) and "a" in w:
+        base = jnp.einsum("...d,df->...f", x, w["w"].astype(x.dtype))
+        lo = jnp.einsum("...d,dr->...r", x, w["a"].astype(x.dtype))
+        lo = jnp.einsum("...r,rf->...f", lo, w["b"].astype(x.dtype))
+        return base + lo
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Masking helpers
+# --------------------------------------------------------------------------- #
+NEG_INF = -1e30
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0,
+                window: int = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend.  ``q_offset`` is the
+    absolute position of the first query (decode / chunked prefill).
+    ``window`` > 0 restricts to a trailing sliding window."""
+    q_pos = jnp.arange(q_len) + q_offset
+    kv_pos = jnp.arange(kv_len)
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        m = m & (kv_pos[None, :] > q_pos[:, None] - window)
+    return m

@@ -1,0 +1,63 @@
+"""Loss functions: next-token cross-entropy (vocab-chunked), sequence
+classification head loss (Banking77 case study), KD distillation loss
+wrapper (delegates to kernels/kd_loss ops for the TPU path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None, vocab_chunk: int = 0):
+    """logits: (..., V) fp; labels: (...) int32; mask (...) or None.
+
+    Returns (mean_loss, n_tokens).  fp32 accumulation; ``vocab_chunk`` is a
+    hook for chunked LSE on very large vocabs (0 = dense).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll), jnp.asarray(nll.size, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / n, n
+
+
+def next_token_loss(logits, tokens, mask=None):
+    """Shifted LM loss.  logits: (B,S,V); tokens: (B,S)."""
+    lg = logits[:, :-1]
+    lb = tokens[:, 1:]
+    m = None if mask is None else mask[:, 1:]
+    return cross_entropy(lg, lb, m)
+
+
+def kd_kl(student_logits, teacher_logits, temperature: float = 1.0,
+          mask=None):
+    """KL(teacher || student) with temperature, mean over tokens.
+
+    Both logits (..., V).  The (soft) distillation loss of KD-FedLLMs
+    (paper SS II.B); kernels/kd_loss.py fuses this over vocab chunks.
+    """
+    t = jnp.asarray(temperature, jnp.float32)
+    ts = teacher_logits.astype(jnp.float32) / t
+    ss = student_logits.astype(jnp.float32) / t
+    tp = jax.nn.log_softmax(ts, axis=-1)
+    sp = jax.nn.log_softmax(ss, axis=-1)
+    kl = jnp.sum(jnp.exp(tp) * (tp - sp), axis=-1) * (t * t)
+    if mask is None:
+        return jnp.mean(kl)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(kl * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def classification_loss(logits_last, labels):
+    """Intent-classification loss on the last-position logits restricted to
+    the first ``n_classes`` vocab entries (Banking77 case study)."""
+    return cross_entropy(logits_last, labels)[0]
+
+
+def accuracy(logits, labels) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

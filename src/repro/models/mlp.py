@@ -1,0 +1,38 @@
+"""Dense MLP blocks: SwiGLU (llama/mistral/qwen), GELU (gpt2/whisper),
+squared-ReLU (nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import hint, mm
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0, dtype=jnp.float32):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": common.dense_init(ks[0], (d, ff), dtype),
+            "w_in": common.dense_init(ks[1], (d, ff), dtype),
+            "w_out": common.dense_init(ks[2], (ff, d), dtype,
+                                       scale=ff ** -0.5),
+        }
+    return {
+        "w_in": common.dense_init(ks[0], (d, ff), dtype),
+        "w_out": common.dense_init(ks[1], (ff, d), dtype, scale=ff ** -0.5),
+    }
+
+
+def mlp_fwd(params, cfg: ModelConfig, x):
+    if cfg.activation == "swiglu":
+        g = common.silu(mm(x, params["w_gate"]))
+        h = mm(x, params["w_in"]) * g
+    else:
+        act = common.relu2 if cfg.activation == "relu2" else common.gelu
+        h = act(mm(x, params["w_in"]))
+    h = hint(h, ("pod", "data"), None, "model")
+    return mm(h, params["w_out"])

@@ -1,0 +1,115 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU) [arXiv:2402.19427].
+
+Block:  x -> { linear -> temporal conv1d -> RG-LRU }  * { linear -> GeLU }
+          -> linear out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              input gate
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))   c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth parallel
+prefix — the TPU-native algorithm; also keeps XLA FLOP accounting honest,
+unlike a while-loop scan whose body is counted once).  Decode carries a
+single (B, w) state.  The Pallas kernel (kernels/rglru_scan.py) is the
+fused TPU hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import mm
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_rec_in": common.dense_init(ks[0], (d, w), dtype),
+        "w_gate_in": common.dense_init(ks[1], (d, w), dtype),
+        "conv_w": common.dense_init(ks[2], (cfg.conv1d_width, w), dtype,
+                                    scale=cfg.conv1d_width ** -0.5),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": common.dense_init(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_x": common.dense_init(ks[4], (w, w), dtype),
+        "b_x": jnp.zeros((w,), dtype),
+        "lambda": lam.astype(dtype),
+        "w_out": common.dense_init(ks[5], (w, d), dtype, scale=w ** -0.5),
+    }
+
+
+def _gates(params, u):
+    """u: (..., w) post-conv activations -> (log_a, gated_input)."""
+    r = jax.nn.sigmoid(mm(u, params["w_a"]) + params["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(mm(u, params["w_x"]) + params["b_x"].astype(u.dtype))
+    log_a = (RGLRU_C * r.astype(jnp.float32)
+             * jax.nn.log_sigmoid(params["lambda"].astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    bx = beta * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, bx
+
+
+def _conv1d(params, x, state=None):
+    """Depthwise causal temporal conv.  x: (B,S,w).  ``state``: (B,K-1,w)
+    trailing inputs from the previous step (decode)."""
+    K = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, w)
+    out = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_fwd(params, cfg: ModelConfig, x, h0=None):
+    """Full-sequence forward.  x: (B,S,d) -> (B,S,d).  ``h0``: (B,w) initial
+    recurrent state (used by Split-FedLLM truncation and chunked prefill)."""
+    u = mm(x, params["w_rec_in"])                           # (B,S,w)
+    u, _ = _conv1d(params, u)
+    a, bx = _gates(params, u)                               # (B,S,w) fp32
+    if h0 is not None:
+        # fold initial state in as a virtual step: h_t includes a-prefix * h0
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    gate = common.gelu(mm(x, params["w_gate_in"]))
+    out = h.astype(x.dtype) * gate
+    return mm(out, params["w_out"]), h[:, -1]
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width),
+                          dtype),
+    }
+
+
+def rglru_decode(params, cfg: ModelConfig, x, cache):
+    """One-token decode.  x: (B,1,d) -> ((B,1,d), new_cache)."""
+    u = mm(x, params["w_rec_in"])
+    u, conv_state = _conv1d(params, u, cache["conv"])
+    a, bx = _gates(params, u)                               # (B,1,w)
+    h = a[:, 0] * cache["h"] + bx[:, 0]                     # (B,w)
+    gate = common.gelu(mm(x, params["w_gate_in"]))
+    out = h[:, None].astype(x.dtype) * gate
+    return mm(out, params["w_out"]), {"h": h, "conv": conv_state}

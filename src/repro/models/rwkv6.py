@@ -1,0 +1,216 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: time-mix (WKV with
+data-dependent decay) + channel-mix.
+
+Per head (dk = dv = head_dim), with data-dependent per-channel decay w_t:
+
+    S_t = diag(w_t) . S_{t-1} + k_t^T v_t          state: (dk, dv)
+    y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+
+Full-sequence forward uses the chunkwise-parallel linear-attention
+algorithm (intra-chunk quadratic + inter-chunk state carry): memory
+O(T*d + T^2/Nc) instead of O(T*dk*dv), and the MXU-friendly TPU form.
+Decode carries (B, H, dk, dv) state.  Token shift uses static learned
+lerp (RWKV-5 style) for r/k/v/g; the decay w_t is data-dependent through
+a rank-64 LoRA as in Finch — the headline Finch feature.
+
+kernels/rwkv6_scan.py is the fused Pallas TPU path; ref oracle is the
+step-by-step ``lax.scan`` here (``wkv_ref``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import mm
+
+CHUNK = 16
+DECAY_LORA = 64
+_EXP_CLAMP = 80.0
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.head_dim if cfg.head_dim else 64
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": common.dense_init(ks[0], (d, d), dtype),
+        "w_k": common.dense_init(ks[1], (d, d), dtype),
+        "w_v": common.dense_init(ks[2], (d, d), dtype),
+        "w_g": common.dense_init(ks[3], (d, d), dtype),
+        "w_o": common.dense_init(ks[4], (d, d), dtype, scale=d ** -0.5),
+        # data-dependent decay: w0 + tanh(x@A)@B
+        "decay_w0": jnp.full((d,), -4.0, dtype),     # w ~ exp(-exp(-4)) ~ .98
+        "decay_a": common.dense_init(ks[5], (d, DECAY_LORA), dtype),
+        "decay_b": common.dense_init(ks[6], (DECAY_LORA, d), dtype,
+                                     scale=DECAY_LORA ** -1.0),
+        "bonus_u": jnp.zeros((d,), dtype),
+        "ln_x": common.init_layernorm(d, dtype),     # group-norm surrogate
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_w_k": common.dense_init(ks[7], (d, cfg.d_ff), dtype),
+        "cm_w_v": common.dense_init(ks[8], (cfg.d_ff, d), dtype,
+                                    scale=cfg.d_ff ** -0.5),
+        "cm_w_r": common.dense_init(ks[9], (d, d), dtype),
+    }
+    return p
+
+
+def _shift(x, last=None):
+    """x_{t-1} stream.  x: (B,S,d); ``last``: (B,d) from previous call."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xp, mu):
+    return x + (xp - x) * mu.astype(x.dtype)
+
+
+def _decay(params, xw):
+    """log(w_t) <= 0;  w_t = exp(-exp(w0 + tanh(x@A)@B))."""
+    dd = jnp.tanh(mm(xw, params["decay_a"]))
+    ww = params["decay_w0"].astype(jnp.float32) + mm(
+        dd, params["decay_b"]).astype(jnp.float32)
+    return -jnp.exp(jnp.clip(ww, -8.0, 3.0))        # log-decay, (B,S,d)
+
+
+# --------------------------------------------------------------------------- #
+# WKV core: reference scan and chunkwise-parallel form
+# --------------------------------------------------------------------------- #
+def wkv_ref(r, k, v, logw, u):
+    """Step-by-step oracle.  r,k,v,logw: (B,S,H,D); u: (H,D).
+    Returns y: (B,S,H,D), final state (B,H,D,D)."""
+    B, S, H, D = r.shape
+    f32 = jnp.float32
+
+    def step(S_, inp):
+        r_, k_, v_, lw_ = inp                        # (B,H,D)
+        kv = k_[..., :, None] * v_[..., None, :]     # (B,H,D,D)
+        y = jnp.einsum("bhd,bhde->bhe", r_, S_ + u[None, :, :, None] * kv)
+        S_ = jnp.exp(lw_)[..., None] * S_ + kv
+        return S_, y
+
+    S0 = jnp.zeros((B, H, D, D), f32)
+    xs = tuple(jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, logw))
+    Sf, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), Sf
+
+
+def wkv_chunked(r, k, v, logw, u, state=None, chunk: int = CHUNK):
+    """Chunkwise-parallel WKV.  Shapes as wkv_ref; ``state``: (B,H,D,D)."""
+    B, S, H, D = r.shape
+    f32 = jnp.float32
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    N = S // chunk
+    rs, ks, vs, lws = (
+        a.astype(f32).reshape(B, N, chunk, H, D) for a in (r, k, v, logw))
+    S0 = state if state is not None else jnp.zeros((B, H, D, D), f32)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] > idx[None, :]                # strict lower (j < i)
+
+    def chunk_step(S_, inp):
+        rc, kc, vc, lwc = inp                        # (B,chunk,H,D)
+        la = jnp.cumsum(lwc, axis=1)                 # inclusive cum log-decay
+        la_excl = la - lwc                           # exclusive (prod j<i)
+        # inter-chunk: y_i += (r_i * exp(la_excl_i)) @ S
+        r_sc = rc * jnp.exp(jnp.clip(la_excl, -_EXP_CLAMP, _EXP_CLAMP))
+        y = jnp.einsum("bchd,bhde->bche", r_sc, S_)
+        # intra-chunk: att[i,j] = sum_d r_i exp(la_excl_i - la_j) k_j, j<i
+        k_sc = kc * jnp.exp(jnp.clip(-la, -_EXP_CLAMP, _EXP_CLAMP))
+        att = jnp.einsum("bihd,bjhd->bhij", r_sc, k_sc)
+        att = att * tri[None, None]
+        diag = jnp.einsum("bihd,bihd->bhi", rc * u[None, None], kc)
+        y = y + jnp.einsum("bhij,bjhd->bihd", att, vc) \
+              + diag.transpose(0, 2, 1)[..., None] * vc
+        # state update: S' = diag(exp(la_L)) S + sum_j exp(la_L - la_j) k_j v_j
+        laL = la[:, -1]                              # (B,H,D)
+        k_tail = kc * jnp.exp(jnp.clip(laL[:, None] - la, -_EXP_CLAMP,
+                                       _EXP_CLAMP))
+        S_ = jnp.exp(jnp.clip(laL, -_EXP_CLAMP, 0.0))[..., None] * S_ \
+            + jnp.einsum("bchd,bche->bhde", k_tail, vc)
+        return S_, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, lws))
+    Sf, ys = jax.lax.scan(chunk_step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, D)
+    return y, Sf
+
+
+# --------------------------------------------------------------------------- #
+# Block forward
+# --------------------------------------------------------------------------- #
+def _project(params, cfg, x, x_prev):
+    d = cfg.d_model
+    hd = cfg.head_dim if cfg.head_dim else 64
+    H = d // hd
+    B, S, _ = x.shape
+    r = mm(_lerp(x, x_prev, params["mu_r"]), params["w_r"])
+    k = mm(_lerp(x, x_prev, params["mu_k"]), params["w_k"])
+    v = mm(_lerp(x, x_prev, params["mu_v"]), params["w_v"])
+    g = jax.nn.silu(mm(_lerp(x, x_prev, params["mu_g"]), params["w_g"]))
+    logw = _decay(params, _lerp(x, x_prev, params["mu_w"]))
+    shp = (B, S, H, hd)
+    u = params["bonus_u"].astype(jnp.float32).reshape(H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            logw.reshape(shp), u, g)
+
+
+def timemix_fwd(params, cfg: ModelConfig, x, state=None, x_last=None):
+    """x: (B,S,d) -> (out, (new_state, new_x_last))."""
+    B, S, d = x.shape
+    x_prev = _shift(x, x_last)
+    r, k, v, logw, u, g = _project(params, cfg, x, x_prev)
+    if S % CHUNK == 0 and S > 1:
+        y, Sf = wkv_chunked(r, k, v, logw, u, state)
+    else:
+        y, Sf = wkv_ref(r, k, v, logw, u) if state is None else \
+            _wkv_ref_with_state(r, k, v, logw, u, state)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = common.layernorm(params["ln_x"], y) * g
+    return mm(y, params["w_o"]), (Sf, x[:, -1])
+
+
+def _wkv_ref_with_state(r, k, v, logw, u, S0):
+    B, S, H, D = r.shape
+
+    def step(S_, inp):
+        r_, k_, v_, lw_ = inp
+        kv = k_[..., :, None] * v_[..., None, :]
+        y = jnp.einsum("bhd,bhde->bhe", r_, S_ + u[None, :, :, None] * kv)
+        S_ = jnp.exp(lw_)[..., None] * S_ + kv
+        return S_, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, logw))
+    Sf, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), Sf
+
+
+def channelmix_fwd(params, cfg: ModelConfig, x, x_last=None):
+    x_prev = _shift(x, x_last)
+    kx = _lerp(x, x_prev, params["cm_mu_k"])
+    rx = _lerp(x, x_prev, params["cm_mu_r"])
+    k = common.relu2(mm(kx, params["cm_w_k"]))
+    out = jax.nn.sigmoid(mm(rx, params["cm_w_r"])) * mm(k, params["cm_w_v"])
+    return out, x[:, -1]
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.head_dim if cfg.head_dim else 64
+    H = d // hd
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), jnp.float32),
+        "x_cm": jnp.zeros((batch, d), jnp.float32),
+    }

@@ -1,0 +1,46 @@
+"""Adam / AdamW over arbitrary pytrees (built from scratch; no optax in
+this environment).  fp32 moments regardless of param dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, lr, b1: float = 0.9, b2: float = 0.999,
+           eps: float = 1e-8, weight_decay: float = 0.0):
+    """Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p2)
+    return (treedef.unflatten(new_p),
+            {"m": treedef.unflatten(new_m),
+             "v": treedef.unflatten(new_v),
+             "step": step})

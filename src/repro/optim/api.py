@@ -1,0 +1,19 @@
+"""Optimizer facade used by the federated round engine and launcher."""
+from __future__ import annotations
+
+from repro.optim import adam, sgd
+
+
+def make_optimizer(name: str, **kw):
+    """Returns (init_fn(params) -> state,
+                update_fn(grads, state, params, lr) -> (params, state))."""
+    if name == "adam":
+        def upd(g, s, p, lr):
+            return adam.update(g, s, p, lr,
+                               weight_decay=kw.get("weight_decay", 0.0))
+        return adam.init, upd
+    if name == "sgd":
+        mom = kw.get("momentum", 0.0)
+        return (lambda p: sgd.init(p, mom),
+                lambda g, s, p, lr: sgd.update(g, s, p, lr, mom))
+    raise ValueError(name)

@@ -1,0 +1,24 @@
+"""Gradient utilities: global-norm clip, finite-check."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def all_finite(tree) -> jax.Array:
+    ok = [jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+          for x in jax.tree.leaves(tree)]
+    return jnp.stack(ok).all() if ok else jnp.asarray(True)

@@ -1,0 +1,27 @@
+"""SGD with optional momentum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, momentum: float = 0.0):
+    if momentum:
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    return {"mu": None}
+
+
+def update(grads, state, params, lr, momentum: float = 0.0):
+    if momentum and state["mu"] is not None:
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        return new_p, {"mu": mu}
+    new_p = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_p, state

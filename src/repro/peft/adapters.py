@@ -1,0 +1,59 @@
+"""Bottleneck adapters (Houlsby-style) — the paper's second PEFT option.
+
+``attach`` returns an *adapter tree* shaped like the model's block
+stacks; models/transformer.block_fwd applies ``x + W_up·gelu(W_down·x)``
+after the MLP residual whenever a block's params carry an "adapter" key
+(bound via ``bind``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_adapters(key, base_params, d_model: int, bottleneck: int = 64,
+                  dtype=jnp.float32):
+    """One adapter per block (stacked over groups like the base tree)."""
+
+    def make(shape_src, k):
+        g = shape_src.shape[0] if shape_src.ndim == 3 else None
+        k1, k2 = jax.random.split(k)
+        shape_d = (g, d_model, bottleneck) if g else (d_model, bottleneck)
+        shape_u = (g, bottleneck, d_model) if g else (bottleneck, d_model)
+        return {"w_down": common.dense_init(k1, shape_d, dtype),
+                "w_up": jnp.zeros(shape_u, dtype)}     # zero-init: identity
+
+    out = {"blocks": [], "tail": []}
+    for i, blk in enumerate(base_params["blocks"]):
+        ref = blk["norm1"]["scale"]                    # (G, d)
+        out["blocks"].append(make(ref[..., None], jax.random.fold_in(key, i)))
+    for i, blk in enumerate(base_params["tail"]):
+        ref = blk["norm1"]["scale"][..., None]
+        out["tail"].append(make(ref, jax.random.fold_in(key, 1000 + i)))
+    out["blocks"] = tuple(out["blocks"])
+    out["tail"] = tuple(out["tail"])
+    return out
+
+
+def bind(base_params, adapter_tree):
+    """Insert adapter params into each block subtree."""
+    out = dict(base_params)
+    blocks = []
+    for blk, ad in zip(base_params["blocks"], adapter_tree["blocks"]):
+        b = dict(blk)
+        b["adapter"] = ad
+        blocks.append(b)
+    out["blocks"] = tuple(blocks)
+    tail = []
+    for blk, ad in zip(base_params["tail"], adapter_tree["tail"]):
+        b = dict(blk)
+        b["adapter"] = ad
+        tail.append(b)
+    out["tail"] = tuple(tail)
+    return out
+
+
+def adapter_fwd(p, x):
+    h = common.gelu(common.mm(x, p["w_down"]))
+    return x + common.mm(h, p["w_up"])

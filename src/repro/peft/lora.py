@@ -1,0 +1,188 @@
+"""LoRA (Low-Rank Adaptation) over functional param trees.
+
+A LoRA tree mirrors the base tree at *targeted* leaves only:
+
+    base:  {"blocks": ({"attn": {"wq": (G,d,f), ...}, ...},)}
+    lora:  {"blocks": ({"attn": {"wq": {"a": (G,d,r), "b": (G,r,f)}},},)}
+
+``bind`` produces the tree the model consumes, replacing each targeted
+weight W with ``{"w": W, "a": A, "b": B, "s": alpha/r}`` — models/common.mm
+dispatches on that dict, computing ``x@W + (x@A)@B*s`` without ever
+materializing W + BA (the Pallas ``lora_matmul`` kernel fuses the same
+computation on TPU).
+
+Gradient flow: core/fedavg closes over the *base* tree and differentiates
+w.r.t. the LoRA tree only, so the base stays frozen with zero optimizer
+state — the PEFT property all three paper frameworks rely on.
+
+Paper (SSV) targets GPT-2's fused ``attn.c_attn``; with split projections
+the equivalent target set is ("wq","wk","wv").
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# weight names LoRA may target, per module kind
+DEFAULT_TARGETS: Tuple[str, ...] = ("wq", "wk", "wv")
+RWKV_TARGETS: Tuple[str, ...] = ("w_r", "w_k", "w_v", "w_g")
+
+
+def default_targets(cfg) -> Tuple[str, ...]:
+    """Paper-faithful targets, adapted per family (DESIGN SSArch-applicability):
+    attention archs -> QKV; attention-free RWKV -> time-mix projections."""
+    if cfg.attention_free:
+        return RWKV_TARGETS
+    return DEFAULT_TARGETS
+
+
+def _walk(tree, fn: Callable, path: Tuple[str, ...] = ()):
+    """Depth-first walk; fn(path, leaf) -> replacement or None (drop)."""
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            r = _walk(v, fn, path + (str(k),))
+            if r is not None:
+                out[k] = r
+        return out or None
+    if isinstance(tree, (tuple, list)):
+        out = []
+        keep = False
+        for i, v in enumerate(tree):
+            r = _walk(v, fn, path + (str(i),))
+            keep = keep or (r is not None)
+            out.append(r)
+        return tuple(out) if keep else None
+    return fn(path, tree)
+
+
+def init_lora(key, base_params, targets: Sequence[str], rank: int,
+              alpha: float = 32.0, dtype=jnp.float32):
+    """Build a LoRA tree.  A ~ N(0, 1/r) (paper: Gaussian init), B = 0."""
+    counter = [0]
+
+    def init_leaf(path, leaf):
+        if path[-1] not in targets or not hasattr(leaf, "ndim"):
+            return None
+        if leaf.ndim < 2:
+            return None
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        *batch_dims, d_in, d_out = leaf.shape
+        a = jax.random.normal(k, (*batch_dims, d_in, rank),
+                              jnp.float32) * (rank ** -0.5)
+        b = jnp.zeros((*batch_dims, rank, d_out), jnp.float32)
+        return {"a": a.astype(dtype), "b": b.astype(dtype)}
+
+    lora = _walk(base_params, init_leaf)
+    return lora if lora is not None else {}
+
+
+def bind(base_params, lora_tree, alpha: float, rank: int,
+         dropout_mask_rng: Optional[jax.Array] = None,
+         dropout: float = 0.0):
+    """Return the model-consumable tree with LoRA leaves bound.
+
+    ``dropout`` drops input features on the LoRA branch only (per-call
+    feature mask — the pure-functional form of LoRA dropout)."""
+    scale = alpha / max(rank, 1)
+    counter = [0]
+
+    def combine(b, l):
+        if isinstance(l, dict) and set(l) == {"a", "b"} and hasattr(
+                l["a"], "ndim"):
+            a = l["a"]
+            if dropout > 0.0 and dropout_mask_rng is not None:
+                # fold feature-dropout mask into A: (x*m)@A == x@(m[:,None]*A)
+                counter[0] += 1
+                k = jax.random.fold_in(dropout_mask_rng, counter[0])
+                d_in = a.shape[-2]
+                keep = jax.random.bernoulli(k, 1.0 - dropout, (d_in,))
+                a = a * (keep.astype(a.dtype) / (1.0 - dropout))[:, None]
+            # fold alpha/r into B so bound leaves stay plain arrays
+            return {"w": b, "a": a, "b": l["b"] * scale}
+        if isinstance(b, dict):
+            return {k: combine(b[k], l[k]) if (isinstance(l, dict)
+                                               and k in l) else b[k]
+                    for k in b}
+        if isinstance(b, (tuple, list)):
+            return tuple(
+                combine(bv, l[i]) if (isinstance(l, (tuple, list))
+                                      and l[i] is not None) else bv
+                for i, bv in enumerate(b))
+        return b
+
+    return combine(base_params, lora_tree)
+
+
+def merge(base_params, lora_tree, alpha: float, rank: int):
+    """Materialize W + s*A@B (serving path; inverse of bind)."""
+    scale = alpha / max(rank, 1)
+
+    def combine(b, l):
+        if isinstance(l, dict) and set(l) == {"a", "b"} and hasattr(
+                l["a"], "ndim"):
+            delta = jnp.einsum("...dr,...rf->...df", l["a"], l["b"]) * scale
+            return (b + delta.astype(b.dtype))
+        if isinstance(b, dict):
+            return {k: combine(b[k], l[k]) if (isinstance(l, dict)
+                                               and k in l) else b[k]
+                    for k in b}
+        if isinstance(b, (tuple, list)):
+            return tuple(
+                combine(bv, l[i]) if (isinstance(l, (tuple, list))
+                                      and l[i] is not None) else bv
+                for i, bv in enumerate(b))
+        return b
+
+    return combine(base_params, lora_tree)
+
+
+def n_params(lora_tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora_tree))
+
+
+def n_bytes(lora_tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(lora_tree))
+
+
+# --------------------------------------------------------------------------- #
+# Heterogeneous-rank harmonization (paper SS IV.A.2 — beyond-paper feature)
+# --------------------------------------------------------------------------- #
+def pad_rank(lora_tree, target_rank: int, rescale: bool = True):
+    """Zero-pad a LoRA tree's rank dim up to ``target_rank``.
+
+    bind() scales the delta by alpha/rank, so growing the rank would
+    silently shrink the learned delta; with ``rescale`` (default) B is
+    multiplied by target/orig so the effective delta is preserved exactly
+    (padded rows of B are zero, so the extra rank starts inert)."""
+
+    def pad(x, axis):
+        pad_n = target_rank - x.shape[axis]
+        if pad_n <= 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad_n)
+        return jnp.pad(x, widths)
+
+    def rec(l):
+        if isinstance(l, dict) and set(l) == {"a", "b"}:
+            orig = l["a"].shape[-1]
+            gain = (target_rank / orig) if (rescale and orig) else 1.0
+            return {"a": pad(l["a"], -1), "b": pad(l["b"] * gain, -2)}
+        if isinstance(l, dict):
+            return {k: rec(v) for k, v in l.items()}
+        if isinstance(l, (tuple, list)):
+            return tuple(rec(v) if v is not None else None for v in l)
+        return l
+
+    return rec(lora_tree)
+
+
+def svd_truncate(delta: jax.Array, rank: int):
+    """Rank-r factorization of a (possibly stacked) delta via SVD."""
+    u, s, vt = jnp.linalg.svd(delta.astype(jnp.float32), full_matrices=False)
+    u = u[..., :, :rank] * s[..., None, :rank]
+    return u, vt[..., :rank, :]

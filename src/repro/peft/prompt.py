@@ -1,0 +1,17 @@
+"""Prompt tuning — the paper's third PEFT option: ``n_virtual`` learned
+embeddings prepended to every input sequence (soft prompt)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_prompt(key, d_model: int, n_virtual: int = 16, dtype=jnp.float32):
+    return {"prompt": jax.random.normal(key, (n_virtual, d_model),
+                                        jnp.float32).astype(dtype) * 0.02}
+
+
+def expand(prompt_tree, batch: int):
+    """(n_virtual, d) -> (B, n_virtual, d) prefix embeddings."""
+    p = prompt_tree["prompt"]
+    return jnp.broadcast_to(p[None], (batch,) + p.shape)

@@ -1,0 +1,56 @@
+"""Parse collective ops out of post-SPMD HLO text.
+
+``cost_analysis()`` has no collective view, so we sum the operand/result
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the compiled module (charter ROOFLINE ANALYSIS).
+
+HLO result lines look like:
+    %all-gather.3 = bf16[16,4096,1024]{2,1,0} all-gather(...)
+Tuple-typed collectives:  (bf16[...], bf16[...]) all-reduce(...)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# one shaped buffer, e.g. bf16[16,4096,1024]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+(" + "|".join(COLLECTIVES)
+    + r")(\.|\()")
+
+
+def _buffer_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result-buffer bytes per collective kind (per-device view —
+    post-SPMD shapes are already the per-shard shapes)."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _buffer_bytes(type_str)
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())

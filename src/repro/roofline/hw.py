@@ -1,0 +1,18 @@
+"""TPU v5e hardware constants (charter ROOFLINE ANALYSIS)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16 * 2**30          # v5e HBM capacity
+
+
+def compute_time_s(flops: float, chips: int) -> float:
+    return flops / (chips * PEAK_FLOPS_BF16)
+
+
+def memory_time_s(bytes_: float, chips: int) -> float:
+    return bytes_ / (chips * HBM_BW)
+
+
+def collective_time_s(bytes_: float, chips: int) -> float:
+    return bytes_ / (chips * ICI_BW)

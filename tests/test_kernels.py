@@ -1,0 +1,151 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(charter c: for each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kd_loss import kd_loss_rows
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.quantize import quantize_rows
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("M,K,N,r", [(128, 256, 128, 4), (256, 512, 384, 8),
+                                     (128, 1024, 256, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul_sweep(M, K, N, r, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(M + N + r), 4)
+    x = rand(ks[0], (M, K), dtype)
+    w = rand(ks[1], (K, N), dtype, 0.05)
+    a = rand(ks[2], (K, r), dtype, 0.05)
+    b = rand(ks[3], (r, N), dtype, 0.05)
+    out = lora_matmul(x, w, a, b, bm=128, bk=256, bn=128)
+    expect = ref.lora_matmul_ref(x, w, a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("Sq,D,H,KV", [(128, 64, 4, 4), (256, 64, 4, 2),
+                                       (256, 128, 8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention_sweep(Sq, D, H, KV, causal, window):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(Sq + D + window), 3)
+    q = rand(ks[0], (B * H, Sq, D))
+    k = rand(ks[1], (B * KV, Sq, D))
+    v = rand(ks[2], (B * KV, Sq, D))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bkv=64)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    B, S, D = 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (rand(kk, (B, S, D), jnp.bfloat16) for kk in ks)
+    out = flash_attention(q, k, v, bq=64, bkv=64)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("R,V,br,bv", [(64, 1024, 32, 256),
+                                       (128, 4096, 64, 512),
+                                       (32, 512, 32, 512)])
+@pytest.mark.parametrize("T", [1.0, 2.0, 4.0])
+def test_kd_loss_sweep(R, V, br, bv, T):
+    ks = jax.random.split(jax.random.PRNGKey(R + V), 2)
+    t = rand(ks[0], (R, V), scale=3.0)
+    s = rand(ks[1], (R, V), scale=3.0)
+    rows = kd_loss_rows(t, s, temperature=T, br=br, bv=bv)
+    expect = ref.kd_loss_rows_ref(t, s, T)
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kd_loss_zero_when_identical():
+    t = rand(jax.random.PRNGKey(3), (32, 2048), scale=5.0)
+    rows = kd_loss_rows(t, t, temperature=2.0, br=32, bv=256)
+    np.testing.assert_allclose(np.asarray(rows), 0.0, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,W,bt,bw", [(2, 64, 128, 16, 128),
+                                         (1, 128, 256, 64, 128),
+                                         (3, 32, 128, 32, 64)])
+def test_rglru_scan_sweep(B, S, W, bt, bw):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + W), 3)
+    a = jax.nn.sigmoid(rand(ks[0], (B, S, W)))
+    b = rand(ks[1], (B, S, W), scale=0.1)
+    h0 = rand(ks[2], (B, W))
+    h, hf = rglru_scan(a, b, h0, bw=bw, bt=bt)
+    hr, hfr = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr), rtol=1e-4,
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("BH,S,D,bt", [(4, 32, 16, 16), (2, 64, 32, 32),
+                                       (8, 16, 64, 16)])
+def test_rwkv6_scan_sweep(BH, S, D, bt):
+    ks = jax.random.split(jax.random.PRNGKey(BH + S + D), 5)
+    r = rand(ks[0], (BH, S, D))
+    k = rand(ks[1], (BH, S, D))
+    v = rand(ks[2], (BH, S, D))
+    lw = -jax.nn.softplus(rand(ks[3], (BH, S, D)))
+    u = rand(ks[4], (BH, D), scale=0.1)
+    y, Sf = rwkv6_scan(r, k, v, lw, u, bt=bt)
+    yr, Sfr = ref.rwkv6_scan_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(Sfr), rtol=2e-4,
+                               atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("R,C", [(8, 128), (16, 384), (32, 1000)])
+@pytest.mark.parametrize("bits", [8])
+def test_quantize_sweep(R, C, bits):
+    x = rand(jax.random.PRNGKey(R + C), (R, C), scale=3.0)
+    q, sc = quantize_rows(x, bits=bits, br=min(8, R))
+    qr, scr = ref.quantize_rows_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+def test_ops_wrappers_match_model_layouts():
+    """ops.* handle model-native layouts (B,S,H,D) and padding."""
+    B, S, H, KV, D = 2, 96, 4, 2, 32          # S=96 pads to 128-tile
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = rand(ks[0], (B, S, H * D))
+    w = rand(ks[1], (H * D, 64), scale=0.1)
+    a = rand(ks[2], (H * D, 4), scale=0.1)
+    b = jnp.zeros((4, 64))
+    out = ops.lora_matmul(x, w, a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.lora_matmul_ref(
+            x.reshape(-1, H * D), w, a, b)).reshape(B, S, 64),
+        rtol=2e-4, atol=2e-4)

@@ -1,0 +1,117 @@
+"""LoRA/PEFT unit tests: bind/merge equivalence, rank padding/truncation
+scale preservation, heterogeneous aggregation, adapters, prompts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.heterogeneous import aggregate_hetero
+from repro.core.fedavg import fedavg
+from repro.models.factory import build_model
+from repro.peft import adapters, lora, prompt
+
+CFG = ModelConfig(name="t", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=211)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 1,
+                                          CFG.vocab_size, jnp.int32)}
+    return model, params, batch
+
+
+def _nonzero_lora(params, rank=4, seed=7):
+    lt = lora.init_lora(jax.random.PRNGKey(seed), params,
+                        ("wq", "wk", "wv"), rank)
+    return jax.tree.map(lambda x: x + 0.02, lt)
+
+
+def test_bind_zero_b_is_identity(setup):
+    model, params, batch = setup
+    lt = lora.init_lora(jax.random.PRNGKey(2), params, ("wq",), 4)
+    out0, _ = model.forward(params, batch)
+    out1, _ = model.forward(lora.bind(params, lt, 32, 4), batch)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                               atol=1e-5)
+
+
+def test_bind_matches_merge(setup):
+    model, params, batch = setup
+    lt = _nonzero_lora(params)
+    bound, _ = model.forward(lora.bind(params, lt, 32, 4), batch)
+    merged, _ = model.forward(lora.merge(params, lt, 32, 4), batch)
+    np.testing.assert_allclose(np.asarray(bound), np.asarray(merged),
+                               rtol=2e-3, atol=2e-3)
+    base, _ = model.forward(params, batch)
+    assert float(jnp.abs(bound - base).max()) > 1e-4
+
+
+def test_pad_rank_preserves_delta(setup):
+    model, params, batch = setup
+    lt4 = _nonzero_lora(params, rank=4)
+    out4, _ = model.forward(lora.bind(params, lt4, 32, 4), batch)
+    lt8 = lora.pad_rank(lt4, 8)
+    out8, _ = model.forward(lora.bind(params, lt8, 32, 8), batch)
+    np.testing.assert_allclose(np.asarray(out4), np.asarray(out8),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lora_targets_rwkv():
+    cfg = ModelConfig(name="r", family="ssm", n_layers=2, d_model=64,
+                      n_heads=0, n_kv_heads=0, d_ff=96, vocab_size=211,
+                      layer_pattern=("rwkv6",), head_dim=16)
+    assert lora.default_targets(cfg) == lora.RWKV_TARGETS
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lt = lora.init_lora(jax.random.PRNGKey(1), params, lora.RWKV_TARGETS, 4)
+    assert lora.n_params(lt) > 0
+
+
+def test_hetero_zeropad_equals_fedavg_when_same_rank(setup):
+    _, params, _ = setup
+    trees = [_nonzero_lora(params, seed=s) for s in range(3)]
+    agg_h = aggregate_hetero(trees, [4, 4, 4], 32.0, 4, method="zeropad")
+    agg_f = fedavg(trees)
+    for a, b in zip(jax.tree.leaves(agg_h), jax.tree.leaves(agg_f)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_hetero_svd_reconstructs_uniform_delta(setup):
+    model, params, batch = setup
+    lt = _nonzero_lora(params, rank=4)
+    # three identical clients -> aggregate must equal each client's delta
+    agg = aggregate_hetero([lt, lt, lt], [4, 4, 4], 32.0, 4, method="svd")
+    out_lt, _ = model.forward(lora.bind(params, lt, 32, 4), batch)
+    out_agg, _ = model.forward(lora.bind(params, agg, 32, 4), batch)
+    np.testing.assert_allclose(np.asarray(out_lt), np.asarray(out_agg),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dropout_mask_changes_output_deterministically(setup):
+    model, params, batch = setup
+    lt = _nonzero_lora(params)
+    b1 = lora.bind(params, lt, 32, 4,
+                   dropout_mask_rng=jax.random.PRNGKey(5), dropout=0.5)
+    b2 = lora.bind(params, lt, 32, 4,
+                   dropout_mask_rng=jax.random.PRNGKey(5), dropout=0.5)
+    o1, _ = model.forward(b1, batch)
+    o2, _ = model.forward(b2, batch)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    b3 = lora.bind(params, lt, 32, 4,
+                   dropout_mask_rng=jax.random.PRNGKey(6), dropout=0.5)
+    o3, _ = model.forward(b3, batch)
+    assert float(jnp.abs(o1 - o3).max()) > 1e-6
+
+
+def test_adapter_and_prompt_param_counts(setup):
+    model, params, batch = setup
+    ad = adapters.init_adapters(jax.random.PRNGKey(0), params, CFG.d_model,
+                                bottleneck=8)
+    n_ad = sum(x.size for x in jax.tree.leaves(ad))
+    assert n_ad == CFG.n_layers * 2 * CFG.d_model * 8
+    pr = prompt.init_prompt(jax.random.PRNGKey(1), CFG.d_model, 16)
+    assert pr["prompt"].shape == (16, CFG.d_model)

@@ -1,0 +1,164 @@
+"""Hypothesis property-based tests on system invariants (charter c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+from repro.core.fedavg import fedavg
+from repro.kernels import ref
+from repro.models import common, rwkv6
+from repro.optim import clip
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+
+
+# --------------------------------------------------------------------------- #
+# Quantization: round-trip error bounded by scale/2 per element
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 6), st.integers(2, 64), st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_bound(rows, cols, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 5.0
+    comp, _ = compression.quantize(x, 8)
+    deq = compression.dequantize(comp)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.asarray(comp["scale"]) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1))
+def test_quantize_preserves_sign_and_zero(cols, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, cols))
+    x = x.at[:, 0].set(0.0)
+    comp, _ = compression.quantize(x, 8)
+    deq = np.asarray(compression.dequantize(comp))
+    assert (deq[:, 0] == 0).all()
+    big = np.abs(np.asarray(x)) > np.asarray(comp["scale"])[..., 0:1]
+    assert (np.sign(deq)[big] == np.sign(np.asarray(x))[big]).all()
+
+
+# --------------------------------------------------------------------------- #
+# Top-k compression: exact on the transmitted support
+# --------------------------------------------------------------------------- #
+@given(st.integers(4, 64), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_topk_exact_on_support(V, k, seed):
+    k = min(k, V)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, V))
+    comp, wire = compression.topk_compress(x, k)
+    dense = compression.topk_decompress(comp)
+    vals, idx = comp["values"], comp["indices"]
+    np.testing.assert_allclose(
+        np.take_along_axis(np.asarray(dense), np.asarray(idx), -1),
+        np.asarray(vals))
+    assert wire == vals.size * 8
+    # argmax preserved
+    np.testing.assert_array_equal(np.argmax(np.asarray(dense), -1),
+                                  np.argmax(np.asarray(x), -1))
+
+
+# --------------------------------------------------------------------------- #
+# FedAvg: identity, convexity, weight normalization
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_fedavg_identity(seed, n):
+    t = {"a": jax.random.normal(jax.random.PRNGKey(seed), (4, 3))}
+    agg = fedavg([t] * n)
+    np.testing.assert_allclose(np.asarray(agg["a"]), np.asarray(t["a"]),
+                               rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.lists(st.floats(0.1, 10.0), min_size=2, max_size=4))
+def test_fedavg_convex_bounds(seed, weights):
+    trees = [{"a": jax.random.normal(jax.random.PRNGKey(seed + i), (5,))}
+             for i in range(len(weights))]
+    agg = fedavg(trees, weights)["a"]
+    stack = np.stack([np.asarray(t["a"]) for t in trees])
+    assert (np.asarray(agg) <= stack.max(0) + 1e-6).all()
+    assert (np.asarray(agg) >= stack.min(0) - 1e-6).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.5, 8.0))
+def test_fedavg_weight_scale_invariance(seed, scale):
+    trees = [{"a": jax.random.normal(jax.random.PRNGKey(seed + i), (5,))}
+             for i in range(3)]
+    w = [1.0, 2.0, 3.0]
+    a1 = fedavg(trees, w)["a"]
+    a2 = fedavg(trees, [x * scale for x in w])["a"]
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU: associative scan == sequential recurrence for any gates
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 3), st.integers(2, 32), st.integers(1, 16),
+       st.integers(0, 2**31 - 1))
+def test_rglru_associative_matches_sequential(B, S, W, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.3
+    h0 = jnp.zeros((B, W))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_assoc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_seq, _ = ref.rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h_assoc), np.asarray(h_seq),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# KD loss: KL >= 0 and == 0 iff identical logits (up to shift)
+# --------------------------------------------------------------------------- #
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1),
+       st.floats(0.5, 5.0))
+def test_kd_kl_nonneg_and_shift_invariant(V, seed, T):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    t = jax.random.normal(ks[0], (4, V)) * 3
+    s = jax.random.normal(ks[1], (4, V)) * 3
+    kl = ref.kd_loss_rows_ref(t, s, T)
+    assert (np.asarray(kl) >= -1e-5).all()
+    kl_shift = ref.kd_loss_rows_ref(t + 7.0, s - 3.0, T)
+    np.testing.assert_allclose(np.asarray(kl), np.asarray(kl_shift),
+                               rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# Gradient clipping: norm after clip <= max_norm
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+def test_clip_bounds_norm(seed, max_norm):
+    t = {"a": jax.random.normal(jax.random.PRNGKey(seed), (16,)) * 10}
+    clipped, pre = clip.clip_by_global_norm(t, max_norm)
+    post = float(clip.global_norm(clipped))
+    assert post <= max_norm * (1 + 1e-4)
+    if float(pre) <= max_norm:
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(t["a"]), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# WKV: decay == 0 reduces to cumulative outer-product attention
+# --------------------------------------------------------------------------- #
+@given(st.integers(2, 16), st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_wkv_no_decay_is_cumsum(S, D, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    r = jax.random.normal(ks[0], (1, S, 1, D))
+    k = jax.random.normal(ks[1], (1, S, 1, D))
+    v = jax.random.normal(ks[2], (1, S, 1, D))
+    logw = jnp.zeros((1, S, 1, D))                      # w == 1: no decay
+    u = jnp.zeros((1, D))
+    y, _ = rwkv6.wkv_ref(r, k, v, logw, u)
+    # manual: y_t = r_t @ sum_{j<t} k_j v_j^T
+    S_run = np.zeros((D, D), np.float32)
+    for t in range(S):
+        expect = np.asarray(r[0, t, 0]) @ S_run
+        np.testing.assert_allclose(np.asarray(y[0, t, 0]), expect,
+                                   rtol=2e-3, atol=2e-3)
+        S_run += np.outer(np.asarray(k[0, t, 0]), np.asarray(v[0, t, 0]))

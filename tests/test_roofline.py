@@ -1,0 +1,55 @@
+"""Roofline machinery: HLO collective parser, hw math, model-FLOPs."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.roofline import collectives, hw
+from repro.roofline.analysis import model_flops_for
+
+HLO_SNIPPET = """
+ENTRY %main {
+  %ag = bf16[16,128,1024]{2,1,0} all-gather(bf16[16,128,64] %x), dim=2
+  %ar = f32[256,256]{1,0} all-reduce(f32[256,256] %y), to_apply=%sum
+  %rs.5 = f32[16,16]{1,0} reduce-scatter(f32[256,16] %z), dim=0
+  %a2a = (bf16[8,64]{1,0}, bf16[8,64]{1,0}) all-to-all(bf16[8,64] %p, bf16[8,64] %q)
+  %cp = u32[4]{0} collective-permute(u32[4] %r), pairs={{0,1}}
+  %not_a_collective = f32[9999,9999]{1,0} dot(f32[2,2] %a, f32[2,2] %b)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    cb = collectives.collective_bytes(HLO_SNIPPET)
+    assert cb["all-gather"] == 16 * 128 * 1024 * 2
+    assert cb["all-reduce"] == 256 * 256 * 4
+    assert cb["reduce-scatter"] == 16 * 16 * 4
+    assert cb["all-to-all"] == 2 * 8 * 64 * 2
+    assert cb["collective-permute"] == 4 * 4
+    assert "dot" not in cb
+    total = collectives.total_collective_bytes(HLO_SNIPPET)
+    assert total == sum(cb.values())
+
+
+def test_hw_roofline_math():
+    assert hw.compute_time_s(197e12, 1) == pytest.approx(1.0)
+    assert hw.memory_time_s(819e9, 1) == pytest.approx(1.0)
+    assert hw.collective_time_s(50e9, 1) == pytest.approx(1.0)
+    assert hw.compute_time_s(197e12, 256) == pytest.approx(1 / 256)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen3-1.7b")
+    t = model_flops_for(cfg, SHAPES["train_4k"])
+    p = model_flops_for(cfg, SHAPES["prefill_32k"])
+    d = model_flops_for(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert t == pytest.approx(6 * n * 256 * 4096)
+    assert p == pytest.approx(2 * n * 32 * 32768)
+    assert d == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_flops_smaller():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    t = model_flops_for(cfg, SHAPES["train_4k"])
+    assert t < 6 * cfg.param_count() * 256 * 4096 / 5   # ~10x sparsity

@@ -1,0 +1,177 @@
+"""Substrate unit tests: optimizer, schedules, data pipeline, checkpoint,
+sharding policy (spec trees via AbstractMesh — no device state)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data import banking77, loader, partition
+from repro.launch.sharding import ShardingPolicy
+from repro.models.factory import build_model
+from repro.optim import adam, schedule, sgd
+from repro.peft import lora as lora_lib
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_adam_matches_closed_form_first_step():
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -0.5])}
+    st = adam.init(p)
+    new_p, st = adam.update(g, st, p, lr=0.1)
+    # first Adam step moves by ~lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [1.0 - 0.1, 2.0 + 0.1], rtol=1e-4)
+    assert int(st["step"]) == 1
+
+
+def test_adam_converges_quadratic():
+    p = {"w": jnp.asarray(5.0)}
+    st = adam.init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st = adam.update(g, st, p, lr=0.1)
+    assert abs(float(p["w"])) < 1e-2
+
+
+def test_sgd_momentum():
+    p = {"w": jnp.asarray(1.0)}
+    st = sgd.init(p, momentum=0.9)
+    p1, st = sgd.update({"w": jnp.asarray(1.0)}, st, p, 0.1, momentum=0.9)
+    p2, st = sgd.update({"w": jnp.asarray(1.0)}, st, p1, 0.1, momentum=0.9)
+    assert float(p["w"] - p1["w"]) == pytest.approx(0.1, rel=1e-5)
+    assert float(p1["w"] - p2["w"]) == pytest.approx(0.19, rel=1e-5)
+
+
+def test_schedules():
+    f = schedule.warmup_cosine(1.0, 10, 100)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-3)
+    g = schedule.linear_decay(2.0, 100)
+    assert float(g(50)) == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------------- #
+# data
+# --------------------------------------------------------------------------- #
+def test_banking77_deterministic_and_learnable():
+    d1 = banking77.generate(100, 512, 32, seed=5)
+    d2 = banking77.generate(100, 512, 32, seed=5)
+    np.testing.assert_array_equal(d1["tokens"], d2["tokens"])
+    assert d1["labels"].max() < 77
+    # class keywords exist: same-label rows share tokens above chance
+    same = d1["labels"][0] == d1["labels"]
+    same[0] = False
+    if same.any():
+        row0 = set(d1["tokens"][0]) - {0}
+        other = set(d1["tokens"][np.where(same)[0][0]]) - {0}
+        assert row0 & other
+
+
+def test_paper_splits_sizes():
+    pub, tr, te = banking77.paper_splits(1024, scale=1.0)
+    assert len(pub["tokens"]) == 5002
+    assert len(tr["tokens"]) == 5001
+
+
+def test_partitions():
+    d = banking77.generate(300, 512, 16, seed=0)
+    parts = partition.iid_partition(d, 3)
+    assert sum(len(p["tokens"]) for p in parts) == 300
+    niid = partition.dirichlet_partition(d, 3, alpha=0.1, seed=0)
+    assert sum(len(p["tokens"]) for p in niid) >= 297
+    # non-iid must be more label-skewed than iid
+    def skew(ps):
+        hists = [partition.label_histogram(p) for p in ps]
+        return np.mean([np.abs(h - 1 / 77).sum() for h in hists])
+    assert skew(niid) > skew(parts)
+
+
+def test_loader_epoch():
+    d = banking77.generate(50, 512, 16, seed=0)
+    batches = list(loader.epoch_batches(d, 16, seed=0))
+    assert len(batches) == 3
+    assert all(len(b["tokens"]) == 16 for b in batches)
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip_and_retention():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": ({"c": jnp.ones((4,), jnp.bfloat16)},)}
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td, keep_n=2)
+        for s in (1, 2, 3, 4):
+            cm.save(s, tree, {"step": s})
+        assert cm.steps() == [3, 4]
+        restored, meta = cm.restore(tree)
+        assert meta["step"] == 4
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32))
+            assert x.dtype == y.dtype
+
+
+# --------------------------------------------------------------------------- #
+# sharding policy (AbstractMesh: no devices needed)
+# --------------------------------------------------------------------------- #
+def _abstract_mesh():
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch,embed_spec", [
+    ("qwen3-1.7b", P("model", None)),          # 151936 % 16 == 0
+    ("whisper-base", P(None, "model")),        # 51865 % 16 != 0 -> d_model
+])
+def test_embed_fallback(arch, embed_spec):
+    cfg = get_config(arch)
+    policy = ShardingPolicy(_abstract_mesh(), cfg)
+    model = build_model(cfg)
+    shapes = model.init_abstract()
+    specs = policy.tree_specs(shapes)
+    assert specs["embed"] == embed_spec
+
+
+def test_attention_col_row_rules():
+    cfg = get_config("mistral-large-123b")
+    policy = ShardingPolicy(_abstract_mesh(), cfg)
+    model = build_model(cfg)
+    specs = policy.tree_specs(model.init_abstract())
+    blk = specs["blocks"][0]["attn"]
+    assert blk["wq"] == P(None, None, "model")       # stacked col-parallel
+    assert blk["wo"] == P(None, "model", None)       # stacked row-parallel
+
+
+def test_moe_expert_sharding():
+    cfg = get_config("qwen3-moe-235b-a22b")          # 128 experts % 16 == 0
+    policy = ShardingPolicy(_abstract_mesh(), cfg)
+    model = build_model(cfg)
+    specs = policy.tree_specs(model.init_abstract())
+    assert specs["blocks"][0]["mlp"]["w_in"] == P(None, "model", None, None)
+    cfg2 = get_config("mixtral-8x7b")                # 8 experts -> ffn dim
+    policy2 = ShardingPolicy(_abstract_mesh(), cfg2)
+    specs2 = policy2.tree_specs(build_model(cfg2).init_abstract())
+    assert specs2["blocks"][0]["mlp"]["w_in"] == P(None, None, None, "model")
+
+
+def test_lora_specs_follow_base():
+    cfg = get_config("qwen3-1.7b")
+    policy = ShardingPolicy(_abstract_mesh(), cfg)
+    model = build_model(cfg)
+    shapes = model.init_abstract()
+    lt = jax.eval_shape(lambda: lora_lib.init_lora(
+        jax.random.PRNGKey(0), shapes, ("wq", "wo"), 8))
+    specs = policy.tree_specs(lt)
+    wq = specs["blocks"][0]["attn"]["wq"]
+    assert wq["a"] == P() and wq["b"] == P(None, None, "model")
+    wo = specs["blocks"][0]["attn"]["wo"]
+    assert wo["a"] == P(None, "model", None) and wo["b"] == P()
