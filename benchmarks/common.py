@@ -16,6 +16,8 @@ ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "10"))
 PAD_LEN = int(os.environ.get("REPRO_BENCH_PAD", "24"))
 SEEDS = tuple(int(s) for s in os.environ.get(
     "REPRO_BENCH_SEEDS", "0").split(","))      # paper uses 0,1,42
+# execution backend for every federated run (core/rounds.py dispatch)
+BACKEND = os.environ.get("REPRO_BENCH_BACKEND", "sequential")
 
 
 def case_study_setup(seed: int = 0, scale: Optional[float] = None,
@@ -29,9 +31,10 @@ def case_study_setup(seed: int = 0, scale: Optional[float] = None,
 
 
 def fed_config(framework: str, seed: int = 0, **kw) -> FedConfig:
-    base = dict(framework=framework, n_clients=3, rounds=ROUNDS,
-                lora_rank=4, lora_alpha=32.0, lora_dropout=0.0,
-                split_layer=2, kd_epochs=1, lr=1e-3, seed=seed)
+    base = dict(framework=framework, backend=BACKEND, n_clients=3,
+                rounds=ROUNDS, lora_rank=4, lora_alpha=32.0,
+                lora_dropout=0.0, split_layer=2, kd_epochs=1, lr=1e-3,
+                seed=seed)
     base.update(kw)
     return FedConfig(**base)
 

@@ -2,9 +2,11 @@
 Prints ``name,us_per_call,derived`` CSV (charter d).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,table1,kernels,roofline]
+    PYTHONPATH=src python -m benchmarks.run --only fig4 --backend spmd
 
 Scale knobs via env: REPRO_BENCH_SCALE / REPRO_BENCH_ROUNDS /
-REPRO_BENCH_SEEDS (paper seeds: 0,1,42).
+REPRO_BENCH_SEEDS (paper seeds: 0,1,42); REPRO_BENCH_BACKEND (or
+--backend) picks the federated execution backend (sequential | spmd).
 """
 from __future__ import annotations
 
@@ -20,8 +22,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--backend", default=None,
+                    choices=["sequential", "spmd"],
+                    help="federated execution backend for fig3/fig4/table1")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(MODULES)
+    if args.backend:
+        from benchmarks import common
+        common.BACKEND = args.backend
 
     print("name,us_per_call,derived")
     failures = 0

@@ -204,6 +204,12 @@ class ShapeConfig:
 class FedConfig:
     """Federated fine-tuning round configuration (paper SS II/V)."""
     framework: str = "fedllm"        # fedllm | kd | split
+    # Execution backend for the round engine (core/rounds.py):
+    #   sequential — python loop over clients, one jitted step per batch
+    #   spmd       — clients stacked on a leading axis, one jitted
+    #                program per round (core/fed_spmd.py); client axis
+    #                shardable over a multi-pod mesh's ``pod`` dim
+    backend: str = "sequential"      # sequential | spmd
     n_clients: int = 3
     rounds: int = 10
     local_epochs: int = 1

@@ -1,61 +1,182 @@
-"""SPMD federated round — the hardware-adapted FedLLM (DESIGN SS2).
+"""SPMD federated rounds — the hardware-adapted execution backend for
+all three paper frameworks (DESIGN SS2, ``FedConfig(backend="spmd")``).
 
 The paper's clients are edge devices; on a TPU fleet a "client" is a pod
-(or mesh slice).  Here one jitted program runs EVERY client's local
-epoch simultaneously (clients = leading axis, vmapped) and performs the
-FedAvg aggregation as a mean over that axis — which, with the client
-axis sharded over the multi-pod mesh's ``pod`` dimension, lowers to a
-single cross-pod all-reduce: the parameter-server round of the paper
-becomes one collective.  This is the beyond-paper execution mode used by
-the ``fed_round`` dry-run target (launch/dryrun.py --step fed_round).
+(or mesh slice).  Here one jitted program runs EVERY client's local work
+simultaneously (clients = leading axis, vmapped) and performs the
+server-side aggregation as a reduction over that axis — which, with the
+client axis sharded over the multi-pod mesh's ``pod`` dimension, lowers
+to a single cross-pod all-reduce: the parameter-server round of the
+paper becomes one collective.
+
+Per framework:
+
+- FedLLM (``make_spmd_round``): vmapped local fine-tune scans + weighted
+  FedAvg as a client-axis mean.
+- KD-FedLLM (``make_kd_spmd_fns``): vmapped local fine-tune, batched
+  logit production on the public set, and vmapped client-side
+  distillation; knowledge aggregation is the client-axis reduction in
+  ``kd.aggregate_knowledge_batched``.
+- Split-FedLLM (``make_split_spmd_round``): stacked client-side LoRA
+  halves with ONE shared server half.  The server carry scans the client
+  axis (the paper's round trains the shared server layers
+  client-after-client, so a lockstep-parallel server would change the
+  optimization trajectory); the closing FedAvg of the client halves is
+  still a client-axis reduction.
+
+Clients with ragged batch counts are padded and masked (``valid``): a
+masked step returns the carry unchanged, so every client performs
+exactly the step sequence the sequential backend would.  Host-side
+drivers live in core/rounds_spmd.py; the ``fed_round`` dry-run target
+(launch/dryrun.py --step fed_round) compiles these programs against the
+production meshes.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import tasks
+from repro.data.loader import epoch_batches
 from repro.models.factory import Model
-from repro.optim import adam
-from repro.peft import lora as lora_lib
 
 
+# --------------------------------------------------------------------------- #
+# Stacking utilities (host side)
+# --------------------------------------------------------------------------- #
+def stack_for_clients(tree, n_clients: int):
+    """Broadcast one tree to a leading client axis (a1: distribute)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), tree)
+
+
+def stack_trees(trees: Sequence):
+    """Stack identically-structured per-client trees on a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def split_keys(key, n_clients: int, n_steps: int):
+    """(C, S) grid of PRNG keys (works for legacy and typed key arrays)."""
+    keys = jax.random.split(key, n_clients * n_steps)
+    return keys.reshape((n_clients, n_steps) + keys.shape[1:])
+
+
+def split_each(stacked_keys):
+    """Per-client ``jax.random.split``: (C,)-stacked keys -> (next, sub)."""
+    out = jax.vmap(jax.random.split)(stacked_keys)
+    return out[:, 0], out[:, 1]
+
+
+def stack_client_batches(clients_data: List[Dict], batch_size: int,
+                         seeds: Sequence[int]):
+    """Materialize every client's shuffled epoch batches as stacked
+    arrays with a leading (client, step) axis plus a validity mask.
+
+    ``seeds`` is the per-epoch seed sequence handed to ``epoch_batches``
+    — the same one the sequential backend uses, so each client sees the
+    exact same batch order under both backends.  Clients with fewer
+    batches than the longest are padded by repeating their last batch
+    with ``valid=False``; the scanned round step drops those updates, so
+    per-client step counts are preserved exactly.
+
+    Returns ``(batches, valid, n_tok)``: batches leaves are
+    (C, S, B, ...) jnp arrays, ``valid`` a (C, S) bool ndarray, and
+    ``n_tok`` the per-client real token counts for the cost model.
+    """
+    per_client = []
+    for data in clients_data:
+        client_batches = []
+        for seed in seeds:
+            client_batches.extend(epoch_batches(data, batch_size, seed=seed))
+        per_client.append(client_batches)
+    n_steps = [len(b) for b in per_client]
+    if min(n_steps) == 0:
+        raise ValueError(
+            "spmd backend: every client needs at least one full batch "
+            f"(batch_size={batch_size}, client sizes="
+            f"{[len(d['tokens']) for d in clients_data]})")
+    n_tok = [sum(b["tokens"].size for b in bs) for bs in per_client]
+    S = max(n_steps)
+    valid = np.zeros((len(per_client), S), bool)
+    rows = []
+    for ci, bs in enumerate(per_client):
+        valid[ci, :len(bs)] = True
+        padded = bs + [bs[-1]] * (S - len(bs))
+        rows.append({k: np.stack([b[k] for b in padded]) for k in bs[0]})
+    batches = {k: jnp.asarray(np.stack([r[k] for r in rows]))
+               for k in rows[0]}
+    return batches, valid, n_tok
+
+
+def _select(ok, new, old):
+    """Keep ``new`` where the step was real, the carry otherwise."""
+    return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+
+def weighted_client_mean(stacked_tree, weights):
+    """FedAvg as a reduction over the leading client axis (fp32 accum,
+    like core/fedavg.fedavg) — one all-reduce when that axis is sharded."""
+    w = weights.astype(jnp.float32)
+    w = w / w.sum()
+
+    def mean(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (wx * x.astype(jnp.float32)).sum(axis=0).astype(x.dtype)
+
+    return jax.tree.map(mean, stacked_tree)
+
+
+# --------------------------------------------------------------------------- #
+# Shared local-update machinery (FedLLM a2 / KD b1)
+# --------------------------------------------------------------------------- #
+def make_local_update(model: Model, fed: FedConfig,
+                      task: str = "classification"):
+    """Returns local_update(base, lt, opt, batches, keys, valid) scanning
+    one client's batch sequence — the building block vmapped over the
+    client axis by every SPMD round.  The per-batch step is the
+    sequential backend's own train_step body (fedavg.make_fns), so the
+    backends can never drift apart on the local loss/optimizer."""
+    from repro.core.fedavg import make_fns
+
+    train_step = make_fns(model, fed, task)["train_step_impl"]
+
+    def local_update(base, lt, opt, client_batches, keys, valid):
+        def body(carry, step):
+            lt, opt = carry
+            batch, key, ok = step
+            new_lt, new_opt, loss = train_step(base, lt, opt, batch, key)
+            return (_select(ok, new_lt, lt), _select(ok, new_opt, opt)), \
+                jnp.where(ok, loss, 0.0)
+
+        (lt, opt), losses = jax.lax.scan(
+            body, (lt, opt), (client_batches, keys, valid))
+        return lt, opt, losses.sum() / jnp.maximum(valid.sum(), 1)
+
+    return local_update
+
+
+# --------------------------------------------------------------------------- #
+# 1) FedLLM round (a1-a4)
+# --------------------------------------------------------------------------- #
 def make_spmd_round(model: Model, fed: FedConfig,
                     task: str = "classification"):
-    """Returns round_step(base, stacked_lt, stacked_opt, batches) where
-    stacked_* have a leading client axis C and ``batches`` leaves are
-    (C, n_steps, B, ...).  Output LoRA is already aggregated (identical
-    across the client axis, like a1 of the next round)."""
-    cfg = model.cfg
-    task_loss = tasks.get_loss_fn(task)
+    """Returns round_step(base, stacked_lt, stacked_opt, batches, keys,
+    valid, weights) where stacked_* have a leading client axis C and
+    ``batches`` leaves are (C, n_steps, B, ...).  Output LoRA is already
+    aggregated and redistributed (identical across the client axis, like
+    a1 of the next round)."""
+    local_update = make_local_update(model, fed, task)
 
-    def local_update(base, lt, opt, client_batches):
-        def body(carry, batch):
-            lt, opt = carry
-
-            def loss_fn(l):
-                bound = lora_lib.bind(base, l, fed.lora_alpha,
-                                      fed.lora_rank)
-                logits, aux = model.forward(bound, batch)
-                loss, _ = task_loss(logits, batch)
-                return loss + aux
-
-            loss, grads = jax.value_and_grad(loss_fn)(lt)
-            lt, opt = adam.update(grads, opt, lt, fed.lr)
-            return (lt, opt), loss
-
-        (lt, opt), losses = jax.lax.scan(body, (lt, opt), client_batches)
-        return lt, opt, jnp.mean(losses)
-
-    def round_step(base, stacked_lt, stacked_opt, batches):
+    def round_step(base, stacked_lt, stacked_opt, batches, keys, valid,
+                   weights):
         new_lt, new_opt, losses = jax.vmap(
-            local_update, in_axes=(None, 0, 0, 0))(
-                base, stacked_lt, stacked_opt, batches)
-        # a4: FedAvg == mean over the client axis -> cross-pod all-reduce
-        avg = jax.tree.map(lambda x: jnp.mean(x, axis=0), new_lt)
+            local_update, in_axes=(None, 0, 0, 0, 0, 0))(
+                base, stacked_lt, stacked_opt, batches, keys, valid)
+        # a4: weighted FedAvg == client-axis reduction -> all-reduce
+        avg = weighted_client_mean(new_lt, weights)
         # a1 of the next round: broadcast back to every client slot
         C = jax.tree.leaves(stacked_lt)[0].shape[0]
         redist = jax.tree.map(
@@ -65,6 +186,87 @@ def make_spmd_round(model: Model, fed: FedConfig,
     return round_step
 
 
-def stack_for_clients(tree, n_clients: int):
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), tree)
+# --------------------------------------------------------------------------- #
+# 2) KD-FedLLM stages (b1/b2/b8 batched over clients)
+# --------------------------------------------------------------------------- #
+def make_kd_spmd_fns(model: Model, fed: FedConfig,
+                     task: str = "classification"):
+    """Batched KD-FedLLM stages, clients on the leading axis:
+
+    - client_update(base, slt, sopt, batches, keys, valid): vmapped b1
+      local fine-tuning (each client scans its own private batches).
+    - batched_logits(base, slt, public_batch): b2/b6 knowledge
+      production for every client at once -> (C, B, D).
+    - batched_kd_step(base, slt, sopt, public_batch, teacher, keys):
+      one vmapped b8 distillation step against shared global knowledge.
+
+    Knowledge aggregation (b4) is ``kd.aggregate_knowledge_batched``.
+    """
+    from repro.core.fedavg import make_fns
+
+    fns = make_fns(model, fed, task)
+    local_update = make_local_update(model, fed, task)
+    client_update = jax.jit(jax.vmap(
+        local_update, in_axes=(None, 0, 0, 0, 0, 0)))
+    batched_logits = jax.jit(jax.vmap(
+        fns["logits_fn"], in_axes=(None, 0, None)))
+    batched_kd_step = jax.jit(jax.vmap(
+        fns["kd_step"], in_axes=(None, 0, 0, None, None, 0)))
+    return {"client_update": client_update,
+            "batched_logits": batched_logits,
+            "batched_kd_step": batched_kd_step}
+
+
+# --------------------------------------------------------------------------- #
+# 3) Split-FedLLM round (c1-c5 + cc1-cc4)
+# --------------------------------------------------------------------------- #
+def make_split_spmd_round(model: Model, fed: FedConfig,
+                          task: str = "classification", sfns=None):
+    """One program for the whole Split-FedLLM round.
+
+    Client-side LoRA halves are stacked on a leading client axis and the
+    closing FedAvg (cc2) is a weighted reduction over it.  The shared
+    server half is a carry scanned over the client axis — the paper's
+    round trains the server layers client-after-client, and preserving
+    that order keeps the SPMD backend numerically equivalent to the
+    sequential one (a lockstep-parallel server is a different algorithm,
+    not an execution backend).
+
+    Returns round_step(base_c, base_s, c_global, s_lt, s_opt, batches,
+    keys, valid, weights) -> (new_c_global, s_lt, s_opt, losses).
+    """
+    from repro.core import split as split_mod
+
+    if sfns is None:
+        sfns = split_mod.make_split_fns(model, fed, task)
+    step = sfns["split_step"]
+    opt_init = sfns["opt_init"]
+
+    def round_step(base_c, base_s, c_global, s_lt, s_opt, batches, keys,
+                   valid, weights):
+        def per_client(carry, client):
+            s_lt, s_opt = carry
+            client_batches, client_keys, client_valid = client
+
+            def body(inner, x):
+                c_lt, c_opt, s_lt, s_opt = inner
+                batch, key, ok = x
+                nc, ns, nco, nso, loss = step(base_c, base_s, c_lt, s_lt,
+                                              c_opt, s_opt, batch, key)
+                return (_select(ok, nc, c_lt), _select(ok, nco, c_opt),
+                        _select(ok, ns, s_lt), _select(ok, nso, s_opt)), \
+                    jnp.where(ok, loss, 0.0)
+
+            # cc3: fresh client copy of the global client-side LoRA
+            (c_lt, _, s_lt, s_opt), losses = jax.lax.scan(
+                body, (c_global, opt_init(c_global), s_lt, s_opt),
+                (client_batches, client_keys, client_valid))
+            return (s_lt, s_opt), (c_lt, losses)
+
+        (s_lt, s_opt), (stacked_c, losses) = jax.lax.scan(
+            per_client, (s_lt, s_opt), (batches, keys, valid))
+        # cc2: FedAvg of the client halves — client-axis reduction
+        new_c_global = weighted_client_mean(stacked_c, weights)
+        return new_c_global, s_lt, s_opt, losses
+
+    return round_step

@@ -37,8 +37,9 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         return lora_lib.bind(base, lt, fed.lora_alpha, rank,
                              dropout_mask_rng=rng, dropout=fed.lora_dropout)
 
-    @jax.jit
-    def train_step(base, lt, opt_state, batch, rng):
+    def train_step_impl(base, lt, opt_state, batch, rng):
+        """Raw (un-jitted) local step — also scanned/vmapped by the SPMD
+        backend (core/fed_spmd.py), so both backends share ONE loss."""
         def loss_fn(l):
             bound = _bind(base, l, rng)
             logits, aux = model.forward(bound, batch)
@@ -48,6 +49,8 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         loss, grads = jax.value_and_grad(loss_fn)(lt)
         new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
         return new_lt, new_opt, loss
+
+    train_step = jax.jit(train_step_impl)
 
     @jax.jit
     def eval_step(base, lt, batch):
@@ -89,10 +92,10 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
         return new_lt, new_opt, loss
 
-    return {"train_step": train_step, "eval_step": eval_step,
-            "logits_fn": logits_fn, "kd_step": kd_step,
-            "opt_init": opt_init, "opt_update": opt_update,
-            "bind": _bind}
+    return {"train_step": train_step, "train_step_impl": train_step_impl,
+            "eval_step": eval_step, "logits_fn": logits_fn,
+            "kd_step": kd_step, "opt_init": opt_init,
+            "opt_update": opt_update, "bind": _bind}
 
 
 def _tree_rank(lt, default: int) -> int:

@@ -27,13 +27,19 @@ from repro.data.loader import epoch_batches
 
 
 def client_logits(fns, base, lt, public: Dict, batch_size: int = 64):
-    """b2: knowledge representations on the public dataset."""
+    """b2: knowledge representations on the public dataset, row i holding
+    the logits of public sample i.  Batches arrive permuted (seed-0
+    shuffle), so the concatenation is scattered back to original row
+    order — distill() indexes teachers by original row id."""
     outs = []
     for batch in epoch_batches(public, batch_size, seed=0,
                                drop_remainder=False):
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
         outs.append(np.asarray(fns["logits_fn"](base, lt, jb)))
-    return np.concatenate(outs, axis=0)
+    stacked = np.concatenate(outs, axis=0)
+    out = np.empty_like(stacked)
+    out[_epoch_perm(len(public["tokens"]), 0)] = stacked
+    return out
 
 
 def compress_for_wire(logits: np.ndarray, fed: FedConfig):
@@ -70,6 +76,15 @@ def aggregate_knowledge(client_logits_list: List[np.ndarray],
         chosen = stack[best_client, np.arange(stack.shape[1])]
         agg[noisy] = chosen[noisy]
     return agg
+
+
+def aggregate_knowledge_batched(stacked, weights) -> jax.Array:
+    """b4 as a client-axis reduction for the SPMD backend: weighted mean
+    over axis 0 of a (C, N, D) logit stack in fp32 — lowers to one
+    all-reduce when the client axis is sharded over pods."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / w.sum()
+    return jnp.einsum("c,cnd->nd", w, jnp.asarray(stacked, jnp.float32))
 
 
 def _entropy(logits: np.ndarray) -> np.ndarray:

@@ -38,6 +38,14 @@ class CommLedger:
         self.events.append(CommEvent(rnd, client, name, direction,
                                      int(nbytes)))
 
+    def record_batch(self, rnd: int, name: str, direction: str,
+                     client_bytes: "List[int]"):
+        """One batched SPMD exchange: element i is client i's payload.
+        Wire sizes stay per-simulated-client so Fig. 4 reads identically
+        from either execution backend."""
+        for ci, nbytes in enumerate(client_bytes):
+            self.record(rnd, ci, name, direction, nbytes)
+
     # -- queries ---------------------------------------------------------
     def total(self, direction: Optional[str] = None) -> int:
         return sum(e.bytes for e in self.events

@@ -6,6 +6,14 @@ bytes, client FLOPs) per round.
 
 ``result.history`` is a list of RoundMetrics; ``result.ledger`` has every
 wire transfer; Fig. 3 / Fig. 4 / Table I benchmarks read from these.
+
+Execution backends (``FedConfig.backend``): every framework dispatches
+to either the ``sequential`` backend in this module (python loop over
+clients, one jitted step per batch — the paper-literal reference) or the
+``spmd`` backend (clients stacked on a leading axis, one jitted program
+per round; core/rounds_spmd.py + core/fed_spmd.py).  Both backends
+produce the same ledger bytes exactly and the same accuracy within fp32
+tolerance (tests/test_backend_parity.py).
 """
 from __future__ import annotations
 
@@ -49,21 +57,30 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
                   clients_data: List[Dict], test: Dict,
                   task: str = "classification", batch_size: int = 16,
                   eval_batch: int = 64, verbose: bool = False) -> FedResult:
+    if fed.framework not in ("fedllm", "kd", "split"):
+        raise ValueError(f"unknown framework {fed.framework!r}")
+    backend = getattr(fed, "backend", "sequential") or "sequential"
+    if backend not in ("sequential", "spmd"):
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected 'sequential' or 'spmd')")
     model = build_model(cfg)
     key = jax.random.PRNGKey(fed.seed)
     base = model.init(key)
     targets = fed.lora_targets or lora_lib.default_targets(cfg)
 
+    if backend == "spmd":
+        from repro.core import rounds_spmd  # lazy: avoids import cycle
+        return rounds_spmd.run_spmd(model, base, cfg, fed, targets, public,
+                                    clients_data, test, task, batch_size,
+                                    eval_batch, verbose)
     if fed.framework == "fedllm":
         return _run_fedllm(model, base, cfg, fed, targets, clients_data,
                            test, task, batch_size, eval_batch, verbose)
     if fed.framework == "kd":
         return _run_kd(model, base, cfg, fed, targets, public, clients_data,
                        test, task, batch_size, eval_batch, verbose)
-    if fed.framework == "split":
-        return _run_split(model, base, cfg, fed, targets, clients_data,
-                          test, task, batch_size, eval_batch, verbose)
-    raise ValueError(fed.framework)
+    return _run_split(model, base, cfg, fed, targets, clients_data,
+                      test, task, batch_size, eval_batch, verbose)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,278 @@
+"""Host drivers for the SPMD execution backend
+(``FedConfig(backend="spmd")`` — selected by core/rounds.run_federated).
+
+Each framework's parameter-server round runs as one jitted program over
+stacked per-client state (core/fed_spmd.py).  This module feeds those
+programs the stacked batch tensors, keeps the paper's communication
+ledger identical to the sequential backend (every wire size is derived
+from shapes, so byte totals agree exactly), and evaluates with the same
+jitted eval step.
+
+Parity contract (tests/test_backend_parity.py): per-round ledger bytes
+and client FLOPs match the sequential backend exactly; accuracy/loss
+match within fp32 tolerance (vmapped/batched reductions reorder float
+ops).  With ``lora_dropout > 0`` the backends draw different dropout
+masks — the sequential loop threads one RNG through clients in visit
+order, the SPMD programs use per-(client, step) keys — so bit-level
+parity is only defined at dropout 0.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fed_spmd
+from repro.core import kd as kd_mod
+from repro.core import metrics as M
+from repro.core import split as split_mod
+from repro.core.fedavg import evaluate, make_fns
+from repro.data.loader import epoch_batches
+from repro.peft import lora as lora_lib
+
+
+def run_spmd(model, base, cfg, fed, targets, public: Dict,
+             clients_data: List[Dict], test: Dict, task: str,
+             batch_size: int, eval_batch: int, verbose: bool):
+    if fed.client_ranks and set(fed.client_ranks) != {fed.lora_rank}:
+        raise ValueError(
+            "backend='spmd' stacks client LoRA trees on one axis and "
+            "needs homogeneous client_ranks equal to lora_rank "
+            f"(got client_ranks={fed.client_ranks}, "
+            f"lora_rank={fed.lora_rank}); use backend='sequential' for "
+            "heterogeneous or truncated ranks")
+    runner = {"fedllm": _run_fedllm_spmd, "kd": _run_kd_spmd,
+              "split": _run_split_spmd}[fed.framework]
+    return runner(model, base, cfg, fed, targets, public, clients_data,
+                  test, task, batch_size, eval_batch, verbose)
+
+
+def _client_weights(clients_data):
+    w = [len(d["tokens"]) for d in clients_data]
+    return w, jnp.asarray(np.asarray(w, np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# 1) FedLLMs
+# --------------------------------------------------------------------------- #
+def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
+                     test, task, batch_size, eval_batch, verbose):
+    from repro.core.rounds import FedResult
+
+    fns = make_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 1)
+    n_clients = len(clients_data)
+    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                   fed.lora_alpha)
+    round_step = jax.jit(fed_spmd.make_spmd_round(model, fed, task))
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    _, wj = _client_weights(clients_data)
+    lt_bytes = M.tree_bytes(global_lt)
+    n_lora = lora_lib.n_params(global_lt)
+
+    for rnd in range(fed.rounds):
+        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
+        batches, valid, n_tok = fed_spmd.stack_client_batches(
+            clients_data, batch_size, seeds)
+        # a1: distribute the (identical) global params to every slot
+        ledger.record_batch(rnd, "lora_params", M.DOWN,
+                            [lt_bytes] * n_clients)
+        stacked_lt = fed_spmd.stack_for_clients(global_lt, n_clients)
+        stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](global_lt),
+                                                 n_clients)
+        key, sub = jax.random.split(key)
+        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
+        # a2-a4 as one program: vmapped local scans + client-axis FedAvg
+        redist, _, _ = round_step(base, stacked_lt, stacked_opt, batches,
+                                  keys, jnp.asarray(valid), wj)
+        global_lt = jax.tree.map(lambda x: x[0], redist)
+        # a3: upload — same shapes as the download
+        ledger.record_batch(rnd, "lora_params", M.UP, [lt_bytes] * n_clients)
+        for ci in range(n_clients):
+            cost[ci].add_train(cfg, n_tok[ci], n_lora)
+        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[fedllm/spmd] round {rnd}: acc={acc:.4f} "
+                  f"loss={loss:.4f}")
+    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
+
+
+# --------------------------------------------------------------------------- #
+# 2) KD-FedLLMs
+# --------------------------------------------------------------------------- #
+def _batched_public_logits(kfns, base, stacked_lt, public, batch_size):
+    """b2/b6 for every client at once — same batch order and original-
+    row-order scatter as kd.client_logits, giving (C, N, D) with row i
+    holding public sample i's logits."""
+    outs = []
+    for batch in epoch_batches(public, batch_size, seed=0,
+                               drop_remainder=False):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        outs.append(np.asarray(kfns["batched_logits"](base, stacked_lt, jb)))
+    stacked = np.concatenate(outs, axis=1)
+    out = np.empty_like(stacked)
+    out[:, kd_mod._epoch_perm(len(public["tokens"]), 0)] = stacked
+    return out
+
+
+def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
+                     fed, batch_size, rnd, n_clients):
+    """b8 for every client at once.  Clients distill against the SAME
+    global knowledge over the SAME public batch order (kd.distill), so
+    the per-batch step vmaps cleanly over the client axis.  Per-client
+    RNG streams match the sequential backend's PRNGKey(seed + 31r + ci)."""
+    rngs = jnp.stack([jax.random.PRNGKey(fed.seed + 31 * rnd + ci)
+                      for ci in range(n_clients)])
+    n = len(public["tokens"])
+    for ep in range(fed.kd_epochs):
+        perm = kd_mod._epoch_perm(n, ep)
+        start = 0
+        for batch in epoch_batches(public, batch_size, seed=ep,
+                                   drop_remainder=False):
+            sel = perm[start:start + len(batch["tokens"])]
+            start += len(batch["tokens"])
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            t = jnp.asarray(teacher[sel])
+            rngs, subs = fed_spmd.split_each(rngs)
+            stacked_lt, stacked_opt, _ = kfns["batched_kd_step"](
+                base, stacked_lt, stacked_opt, jb, t, subs)
+    return stacked_lt, stacked_opt
+
+
+def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
+                 test, task, batch_size, eval_batch, verbose):
+    from repro.core.rounds import FedResult
+
+    fns = make_fns(model, fed, task)
+    kfns = fed_spmd.make_kd_spmd_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 2)
+    n_clients = len(clients_data)
+
+    stacked_lt = fed_spmd.stack_trees(
+        [lora_lib.init_lora(jax.random.fold_in(key, ci), base, targets,
+                            fed.lora_rank, fed.lora_alpha)
+         for ci in range(n_clients)])
+    one_lt = jax.tree.map(lambda x: x[0], stacked_lt)
+    stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](one_lt),
+                                             n_clients)
+    server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
+                                   targets, fed.lora_rank, fed.lora_alpha)
+    server_opt = fns["opt_init"](server_lt)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    weights, _ = _client_weights(clients_data)
+    pub_tok = public["tokens"].size
+    n_lora = lora_lib.n_params(server_lt)
+
+    for rnd in range(fed.rounds):
+        # b1: vmapped local fine-tuning (params never leave the client)
+        seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
+        batches, valid, n_tok = fed_spmd.stack_client_batches(
+            clients_data, batch_size, seeds)
+        key, sub = jax.random.split(key)
+        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
+        stacked_lt, stacked_opt, _ = kfns["client_update"](
+            base, stacked_lt, stacked_opt, batches, keys,
+            jnp.asarray(valid))
+        # b2: batched logit production on the public set -> (C, N, D)
+        logits_cnd = _batched_public_logits(kfns, base, stacked_lt, public,
+                                            eval_batch)
+        # b3: per-simulated-client compression + upload accounting
+        uploaded = []
+        for ci in range(n_clients):
+            lg, wire = kd_mod.compress_for_wire(logits_cnd[ci], fed)
+            ledger.record(rnd, ci, "logits", M.UP, wire)
+            uploaded.append(lg)
+            cost[ci].add_train(cfg, n_tok[ci], n_lora)
+            cost[ci].add_fwd(cfg, pub_tok)
+        # b4: knowledge processing as a client-axis reduction
+        teacher = np.asarray(kd_mod.aggregate_knowledge_batched(
+            np.stack(uploaded), weights))
+        # b5: server-side distillation into the global model
+        server_lt, server_opt, _ = kd_mod.distill(
+            fns, base, server_lt, server_opt, public, teacher,
+            fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
+        # b6/b7: global logits back to every client
+        glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
+        glob_wire = kd_mod.compress_for_wire(glob, fed)[1]
+        ledger.record_batch(rnd, "logits", M.DOWN, [glob_wire] * n_clients)
+        # b8: vmapped client-side distillation
+        stacked_lt, stacked_opt = _batched_distill(
+            kfns, base, stacked_lt, stacked_opt, public, glob, fed,
+            eval_batch, rnd, n_clients)
+        for ci in range(n_clients):
+            cost[ci].add_train(cfg, pub_tok * fed.kd_epochs, n_lora)
+        acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[kd/spmd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
+    return FedResult(history, ledger, server_lt, [c.flops for c in cost])
+
+
+# --------------------------------------------------------------------------- #
+# 3) Split-FedLLMs
+# --------------------------------------------------------------------------- #
+def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
+                    test, task, batch_size, eval_batch, verbose):
+    from repro.core.rounds import FedResult
+
+    fns = make_fns(model, fed, task)           # for eval on the full model
+    sfns = split_mod.make_split_fns(model, fed, task)
+    round_step = jax.jit(fed_spmd.make_split_spmd_round(model, fed, task,
+                                                        sfns=sfns))
+    key = jax.random.PRNGKey(fed.seed + 3)
+    n_clients = len(clients_data)
+    L = sfns["n_client_groups"]
+    frac_client = L / max(sfns["n_groups"], 1)
+
+    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                 fed.lora_alpha)
+    c_global, s_lt = split_mod.split_lora(full_lt, L)
+    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
+    s_opt = sfns["opt_init"](s_lt)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    weights, wj = _client_weights(clients_data)
+    c_bytes = M.tree_bytes(c_global)
+    n_c_lora = lora_lib.n_params(c_global)
+    joined = full_lt
+
+    for rnd in range(fed.rounds):
+        batches, valid, n_tok = fed_spmd.stack_client_batches(
+            clients_data, batch_size, [fed.seed * 983 + rnd])
+        key, sub = jax.random.split(key)
+        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
+        # wire bytes are shape-derived — identical per (client, batch)
+        up, down = sfns["wire_bytes_per_batch"](batches["tokens"].shape[-2:])
+        lbl = batches["labels"][0, 0].size * 4 if "labels" in batches else 0
+        for ci in range(n_clients):
+            ledger.record(rnd, ci, "lora_params", M.DOWN, c_bytes)   # cc3
+            for _ in range(int(valid[ci].sum())):
+                ledger.record(rnd, ci, "activations", M.UP, up + lbl)  # c2
+                ledger.record(rnd, ci, "act_grads", M.DOWN, down)      # c4
+            cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
+                               frac_layers=frac_client)
+            ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)     # cc1
+        c_global, s_lt, s_opt, _ = round_step(
+            base_c, base_s, c_global, s_lt, s_opt, batches, keys,
+            jnp.asarray(valid), wj)
+        joined = split_mod.join_lora(c_global, s_lt)
+        acc, loss = evaluate(fns, base, joined, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[split/spmd] round {rnd}: acc={acc:.4f} "
+                  f"loss={loss:.4f}")
+    return FedResult(history, ledger, joined, [c.flops for c in cost])

@@ -106,9 +106,7 @@ def make_split_fns(model: Model, fed: FedConfig,
             return y
         return x
 
-    @jax.jit
-    def split_train_step(base_c, base_s, c_lt, s_lt, c_opt, s_opt, batch,
-                         rng):
+    def split_step(base_c, base_s, c_lt, s_lt, c_opt, s_opt, batch, rng):
         tokens = batch["tokens"]
 
         if cfg.is_encoder_decoder:
@@ -162,6 +160,8 @@ def make_split_fns(model: Model, fed: FedConfig,
         new_s, s_opt2 = opt_update(s_grads, s_opt, s_lt, fed.lr)
         return new_c, new_s, c_opt2, s_opt2, loss
 
+    split_train_step = jax.jit(split_step)
+
     def wire_bytes_per_batch(batch_shape: Tuple[int, int]) -> Tuple[int, int]:
         """(activation_up, grad_down) bytes for one batch (c2/c4)."""
         B, S = batch_shape
@@ -172,9 +172,10 @@ def make_split_fns(model: Model, fed: FedConfig,
         scale = B * S * 4 if qbits else 0
         return elem * per + scale, elem * per + scale
 
-    return {"split_train_step": split_train_step, "opt_init": opt_init,
-            "n_client_groups": L, "wire_bytes_per_batch":
-                wire_bytes_per_batch, "n_groups": n_groups}
+    return {"split_train_step": split_train_step, "split_step": split_step,
+            "opt_init": opt_init, "n_client_groups": L,
+            "wire_bytes_per_batch": wire_bytes_per_batch,
+            "n_groups": n_groups}
 
 
 # --------------------------------------------------------------------------- #

@@ -4,6 +4,8 @@ and record memory/cost/collective analysis.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
         --shape train_4k [--multi-pod] [--step auto|train|prefill|decode|fed_round]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --step fed_round --fed-framework kd
     PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
 
 The XLA_FLAGS line below MUST run before any other jax-importing code:
@@ -25,7 +27,8 @@ import jax           # noqa: E402
 from repro.configs.registry import ARCHS, get_config          # noqa: E402
 from repro.configs.shapes import SHAPES, shape_supported, skip_reason  # noqa: E402
 from repro.launch import steps as steps_mod                   # noqa: E402
-from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.mesh import (activate_mesh, cost_analysis_dict,  # noqa: E402
+                               make_production_mesh)
 from repro.models import common                               # noqa: E402
 from repro.roofline import collectives as coll_mod            # noqa: E402
 
@@ -37,12 +40,15 @@ ASSIGNED = [a for a in ARCHS if not a.startswith("gpt2")]
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             step: str = "auto", remat: str = "full",
             scan_layers: bool = True, verbose: bool = True,
-            parse_collectives: bool = True) -> dict:
+            parse_collectives: bool = True,
+            fed_framework: str = "fedllm") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "step": shape.mode if step == "auto" else step}
+    if step == "fed_round":
+        rec["fed_framework"] = fed_framework
     if step == "auto" and not shape_supported(cfg, shape):
         rec["status"] = "SKIP"
         rec["reason"] = skip_reason(cfg, shape)
@@ -50,12 +56,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         common.enable_shard_hints(True)
         try:
             if step == "fed_round":
                 fn, args, shardings = steps_mod.build_fed_round_step(
-                    cfg, shape, mesh, remat=remat)
+                    cfg, shape, mesh, remat=remat,
+                    framework=fed_framework)
             else:
                 fn, args, shardings = steps_mod.build_step(
                     cfg, shape, mesh, scan_layers=scan_layers, remat=remat)
@@ -68,7 +75,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             common.enable_shard_hints(False)
 
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec.update({
             "status": "OK",
             "lower_s": round(t_low, 2),
@@ -107,6 +114,9 @@ def main():
     ap.add_argument("--step", default="auto",
                     choices=["auto", "train", "prefill", "decode",
                              "fed_round"])
+    ap.add_argument("--fed-framework", default="fedllm",
+                    choices=["fedllm", "kd", "split"],
+                    help="which paper framework --step fed_round compiles")
     ap.add_argument("--remat", default="full", choices=["none", "full"])
     ap.add_argument("--no-scan", action="store_true")
     ap.add_argument("--out", default=None, help="write JSON records here")
@@ -126,7 +136,8 @@ def main():
         for mp in meshes:
             records.append(run_one(args.arch, args.shape, mp,
                                    step=args.step, remat=args.remat,
-                                   scan_layers=not args.no_scan))
+                                   scan_layers=not args.no_scan,
+                                   fed_framework=args.fed_framework))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

@@ -4,6 +4,7 @@ fed_round step.  Each returns (fn, example_args, in_shardings)."""
 from __future__ import annotations
 
 import functools
+from types import SimpleNamespace
 from typing import Tuple
 
 import jax
@@ -112,9 +113,12 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                          n_clients: int = 2, n_local_steps: int = 1,
-                         remat: str = "full", lora_rank: int = LORA_RANK):
-    """Multi-pod federated round: clients on the ``pod`` axis, FedAvg as a
-    cross-pod all-reduce (DESIGN SS2, core/fed_spmd.py)."""
+                         remat: str = "full", lora_rank: int = LORA_RANK,
+                         framework: str = "fedllm"):
+    """Multi-pod federated round for any of the three frameworks:
+    clients on the ``pod`` axis, server aggregation as a cross-pod
+    all-reduce (DESIGN SS2, core/fed_spmd.py).  ``framework`` selects the
+    FedLLM FedAvg round, the KD knowledge round, or the Split round."""
     model = build_model(cfg)
     policy = ShardingPolicy(mesh, cfg)
     params_shape = model.init_abstract(dtype=jnp.bfloat16)
@@ -127,23 +131,166 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
     stack = lambda t: jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), t)
     slt_shape, sopt_shape = stack(lt_shape), stack(opt_shape)
-    per_client_batch = shape.global_batch // n_clients
-    batch_shape = {"tokens": jax.ShapeDtypeStruct(
-        (n_clients, n_local_steps, per_client_batch, shape.seq_len),
-        jnp.int32)}
+    per_client_batch = max(shape.global_batch // n_clients, 1)
 
-    fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA)
-    round_step = fed_spmd.make_spmd_round(model, fed, task="generative")
+    def _stacked_batch(extra_label_keys: bool):
+        inner = specs_mod.train_input_specs(
+            cfg, ShapeConfig(shape.name, shape.seq_len, per_client_batch,
+                             "train"))
+        if extra_label_keys:
+            inner["labels"] = jax.ShapeDtypeStruct((per_client_batch,),
+                                                   jnp.int32)
+            inner["lengths"] = jax.ShapeDtypeStruct((per_client_batch,),
+                                                    jnp.int32)
+        return jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+            (n_clients, n_local_steps) + x.shape, x.dtype), inner)
+
+    keys_shape = jax.eval_shape(
+        lambda: fed_spmd.split_keys(jax.random.PRNGKey(0), n_clients,
+                                    n_local_steps))
+    valid_shape = jax.ShapeDtypeStruct((n_clients, n_local_steps),
+                                       jnp.bool_)
+    weights_shape = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
 
     param_sh = policy.tree_shardings(params_shape)
     pod = ("pod",) if "pod" in mesh.axis_names else ()
-    client_spec = lambda x: policy.named(
-        P(pod, *([None] * x.ndim)))
+    client_spec = lambda x: policy.named(P(pod, *([None] * x.ndim)))
     slt_sh = jax.tree.map(client_spec, lt_shape)
     sopt_sh = jax.tree.map(client_spec, opt_shape)
-    batch_sh = {"tokens": policy.named(P(pod, None, ("data",), None))}
-    args = (params_shape, slt_shape, sopt_shape, batch_shape)
-    shardings = (param_sh, slt_sh, sopt_sh, batch_sh)
+    keys_sh = policy.named(P(pod, *([None] * (len(keys_shape.shape) - 1))))
+    valid_sh = policy.named(P(pod, None))
+    weights_sh = policy.named(P(pod))
+
+    def _batch_sh(batch_shape, client_axis=pod):
+        return jax.tree.map(lambda x: policy.named(P(
+            client_axis, None, ("data",) if x.shape[2] % max(
+                mesh.shape["data"], 1) == 0 else None,
+            *([None] * (x.ndim - 3)))), batch_shape)
+
+    # everything the per-framework builders share, by name
+    ctx = SimpleNamespace(
+        model=model, cfg=cfg, shape=shape, mesh=mesh, policy=policy,
+        pod=pod, n_clients=n_clients, per_client_batch=per_client_batch,
+        lora_rank=lora_rank, params_shape=params_shape, lt_shape=lt_shape,
+        opt_shape=opt_shape, slt_shape=slt_shape, sopt_shape=sopt_shape,
+        keys_shape=keys_shape, valid_shape=valid_shape,
+        weights_shape=weights_shape, param_sh=param_sh, slt_sh=slt_sh,
+        sopt_sh=sopt_sh, keys_sh=keys_sh, valid_sh=valid_sh,
+        weights_sh=weights_sh, stacked_batch=_stacked_batch,
+        batch_sh=_batch_sh)
+
+    if framework == "fedllm":
+        fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA)
+        round_step = fed_spmd.make_spmd_round(model, fed, task="generative")
+        batch_shape = _stacked_batch(False)
+        args = (params_shape, slt_shape, sopt_shape, batch_shape,
+                keys_shape, valid_shape, weights_shape)
+        shardings = (param_sh, slt_sh, sopt_sh, _batch_sh(batch_shape),
+                     keys_sh, valid_sh, weights_sh)
+        return round_step, args, shardings
+    if framework == "kd":
+        return _build_kd_round(ctx)
+    if framework == "split":
+        return _build_split_round(ctx)
+    raise ValueError(f"unknown federated framework {framework!r}")
+
+
+def _build_kd_round(ctx):
+    """KD-FedLLM round core: vmapped b1 local update, batched b2 public
+    logits, b4 client-axis knowledge reduction, b5 server distillation,
+    b6 global logits and vmapped b8 client distillation — one program.
+    Classification task keeps the exchanged knowledge at n_classes dims
+    (paper SSIII.B's framing of why KD favors classification)."""
+    from repro.core import kd as kd_mod
+    from repro.core.fedavg import make_fns
+
+    model, policy, shape = ctx.model, ctx.policy, ctx.shape
+    fed = FedConfig(framework="kd", lora_rank=ctx.lora_rank,
+                    lora_alpha=LORA_ALPHA, lora_dropout=0.0)
+    fns = make_fns(model, fed, task="classification")
+    local_update = fed_spmd.make_local_update(model, fed,
+                                              task="classification")
+
+    def kd_round_core(base, slt, sopt, server_lt, server_opt, batches,
+                      keys, valid, weights, public_batch, client_keys,
+                      server_key):
+        slt, sopt, _ = jax.vmap(
+            local_update, in_axes=(None, 0, 0, 0, 0, 0))(
+                base, slt, sopt, batches, keys, valid)
+        logits = jax.vmap(fns["logits_fn"], in_axes=(None, 0, None))(
+            base, slt, public_batch)                       # (C, Bp, D)
+        teacher = kd_mod.aggregate_knowledge_batched(logits, weights)
+        server_lt, server_opt, _ = fns["kd_step"](
+            base, server_lt, server_opt, public_batch, teacher, server_key)
+        glob = fns["logits_fn"](base, server_lt, public_batch)
+        slt, sopt, _ = jax.vmap(
+            fns["kd_step"], in_axes=(None, 0, 0, None, None, 0))(
+                base, slt, sopt, public_batch, glob, client_keys)
+        return slt, sopt, server_lt, server_opt
+
+    batch_shape = ctx.stacked_batch(True)
+    public_shape = {
+        "tokens": jax.ShapeDtypeStruct(
+            (ctx.per_client_batch, shape.seq_len), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((ctx.per_client_batch,), jnp.int32),
+    }
+    client_keys_shape = jax.eval_shape(
+        lambda: jax.random.split(jax.random.PRNGKey(0), ctx.n_clients))
+    server_key_shape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    lt_sh = policy.tree_shardings(ctx.lt_shape)
+    opt_sh = {"m": lt_sh, "v": lt_sh, "step": policy.named(P())}
+    pub_sh = jax.tree.map(
+        lambda x: policy.named(P(
+            ("data",) if x.shape[0] % max(ctx.mesh.shape["data"], 1) == 0
+            else None, *([None] * (x.ndim - 1)))), public_shape)
+    ckeys_sh = policy.named(
+        P(ctx.pod, *([None] * (len(client_keys_shape.shape) - 1))))
+    skey_sh = policy.named(P(*([None] * len(server_key_shape.shape))))
+    args = (ctx.params_shape, ctx.slt_shape, ctx.sopt_shape, ctx.lt_shape,
+            ctx.opt_shape, batch_shape, ctx.keys_shape, ctx.valid_shape,
+            ctx.weights_shape, public_shape, client_keys_shape,
+            server_key_shape)
+    shardings = (ctx.param_sh, ctx.slt_sh, ctx.sopt_sh, lt_sh, opt_sh,
+                 ctx.batch_sh(batch_shape), ctx.keys_sh, ctx.valid_sh,
+                 ctx.weights_sh, pub_sh, ckeys_sh, skey_sh)
+    return kd_round_core, args, shardings
+
+
+def _build_split_round(ctx):
+    """Split-FedLLM round: stacked client halves, shared server half
+    scanned over the client axis, closing client-axis FedAvg."""
+    from repro.core import split as split_mod
+
+    model, policy = ctx.model, ctx.policy
+    fed = FedConfig(framework="split", lora_rank=ctx.lora_rank,
+                    lora_alpha=LORA_ALPHA, lora_dropout=0.0)
+    sfns = split_mod.make_split_fns(model, fed, task="generative")
+    L = sfns["n_client_groups"]
+    round_step = fed_spmd.make_split_spmd_round(model, fed,
+                                                task="generative",
+                                                sfns=sfns)
+    enc_dec = ctx.cfg.is_encoder_decoder
+    base_c_shape, base_s_shape = jax.eval_shape(
+        lambda b: split_mod.split_base(b, L, enc_dec), ctx.params_shape)
+    c_shape, s_shape = jax.eval_shape(
+        lambda t: split_mod.split_lora(t, L), ctx.lt_shape)
+    s_opt_shape = jax.eval_shape(adam.init, s_shape)
+    batch_shape = ctx.stacked_batch(False)
+    base_c_sh = policy.tree_shardings(base_c_shape)
+    base_s_sh = policy.tree_shardings(base_s_shape)
+    c_sh = policy.tree_shardings(c_shape)
+    s_sh = policy.tree_shardings(s_shape)
+    s_opt_sh = {"m": s_sh, "v": s_sh, "step": policy.named(P())}
+    # the client axis is scanned (shared server carry) — don't shard it
+    keys_sh = policy.named(P(*([None] * len(ctx.keys_shape.shape))))
+    valid_sh = policy.named(P(None, None))
+    weights_sh = policy.named(P(None))
+    batch_sh = ctx.batch_sh(batch_shape, client_axis=None)
+    args = (base_c_shape, base_s_shape, c_shape, s_shape, s_opt_shape,
+            batch_shape, ctx.keys_shape, ctx.valid_shape,
+            ctx.weights_shape)
+    shardings = (base_c_sh, base_s_sh, c_sh, s_sh, s_opt_sh, batch_sh,
+                 keys_sh, valid_sh, weights_sh)
     return round_step, args, shardings
 
 

@@ -62,13 +62,28 @@ def moe_fwd(params, cfg: ModelConfig, x):
                   Falls back to "batched" when no mesh is ambient (CPU).
     """
     if cfg.moe_dispatch == "shard_map":
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = _ambient_mesh()
         if mesh is not None and "model" in (mesh.axis_names or ()):
             return _moe_fwd_shard_map(params, cfg, x, mesh)
         return _moe_fwd_batched(params, cfg, x)
     if cfg.moe_dispatch == "batched":
         return _moe_fwd_batched(params, cfg, x)
     return _moe_fwd_global(params, cfg, x)
+
+
+def _ambient_mesh():
+    """The installed mesh (jax.set_mesh / ``with mesh:``), or None.
+    ``get_abstract_mesh`` only exists on newer jax; older releases track
+    the context-manager mesh in thread resources."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - jax internals moved
+        return None
 
 
 def _route_and_pack(params, cfg: ModelConfig, x):

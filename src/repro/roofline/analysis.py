@@ -29,7 +29,8 @@ import jax
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs.shapes import SHAPES
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import (activate_mesh, cost_analysis_dict,
+                               make_production_mesh)
 from repro.models import common
 from repro.roofline import collectives as coll_mod
 from repro.roofline import hw
@@ -38,7 +39,7 @@ UNROLL_LIMIT = 12     # lower fully-unrolled when total layers <= this
 
 
 def _lower(cfg, shape, mesh, remat="full", step_override=None):
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         common.enable_shard_hints(True)
         try:
             fn, args, shardings = steps_mod.build_step(
@@ -47,7 +48,7 @@ def _lower(cfg, shape, mesh, remat="full", step_override=None):
             compiled = lowered.compile()
         finally:
             common.enable_shard_hints(False)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     text = compiled.as_text()
     return {
         "flops": float(ca.get("flops", 0.0)),

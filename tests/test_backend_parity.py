@@ -1,0 +1,110 @@
+"""Execution-backend parity: ``FedConfig(backend="spmd")`` must agree
+with the sequential reference for every framework — final accuracy/loss
+within fp32 tolerance (vmapped/batched reductions reorder float ops) and
+the communication ledger byte-for-byte (all wire sizes are
+shape-derived).  Dropout is 0 here: with dropout the backends draw
+different (equally valid) mask streams and bit-level parity is
+undefined (see core/rounds_spmd.py)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.configs.gpt2_small import gpt2_tiny
+from repro.core.rounds import run_federated
+from repro.data import banking77, partition
+
+FRAMEWORKS = ("fedllm", "kd", "split")
+
+
+@pytest.fixture(scope="module")
+def case_study():
+    cfg = gpt2_tiny()
+    pub, tr, te = banking77.paper_splits(cfg.vocab_size, pad_len=24,
+                                         scale=0.04)
+    clients = partition.iid_partition(tr, 3)
+    return cfg, pub, clients, te
+
+
+@pytest.fixture(scope="module", params=FRAMEWORKS)
+def both_backends(request, case_study):
+    cfg, pub, clients, te = case_study
+    fed = FedConfig(framework=request.param, n_clients=3, rounds=2,
+                    lora_rank=4, lora_dropout=0.0, split_layer=2,
+                    kd_epochs=1, seed=0)
+    seq = run_federated(cfg, fed, pub, clients, te, batch_size=16,
+                        eval_batch=64)
+    spmd = run_federated(cfg, dataclasses.replace(fed, backend="spmd"),
+                         pub, clients, te, batch_size=16, eval_batch=64)
+    return request.param, seq, spmd
+
+
+def test_accuracy_and_loss_parity(both_backends):
+    fw, seq, spmd = both_backends
+    assert abs(seq.final_accuracy - spmd.final_accuracy) <= 1e-3, fw
+    for hs, hp in zip(seq.history, spmd.history):
+        assert abs(hs.loss - hp.loss) <= 1e-3, fw
+        assert abs(hs.accuracy - hp.accuracy) <= 1e-3, fw
+
+
+def test_ledger_bytes_parity_exact(both_backends):
+    """Per-round, per-client and per-payload byte totals agree exactly:
+    the SPMD backend must not change what the paper's Fig. 4 reports."""
+    fw, seq, spmd = both_backends
+    assert seq.ledger.per_round() == spmd.ledger.per_round(), fw
+    assert seq.ledger.by_name() == spmd.ledger.by_name(), fw
+    assert seq.ledger.per_client_round() == spmd.ledger.per_client_round(), fw
+    assert seq.ledger.total() == spmd.ledger.total(), fw
+
+
+def test_client_flops_parity_exact(both_backends):
+    fw, seq, spmd = both_backends
+    np.testing.assert_array_equal(np.asarray(seq.client_flops),
+                                  np.asarray(spmd.client_flops), err_msg=fw)
+
+
+def test_final_lora_trees_close(both_backends):
+    """The aggregated parameters themselves agree within fp32 noise."""
+    import jax
+
+    fw, seq, spmd = both_backends
+    ls, lp = jax.tree.leaves(seq.final_lora), jax.tree.leaves(spmd.final_lora)
+    assert len(ls) == len(lp), fw
+    for a, b in zip(ls, lp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4, err_msg=fw)
+
+
+def test_spmd_rejects_heterogeneous_ranks(case_study):
+    cfg, pub, clients, te = case_study
+    fed = FedConfig(framework="fedllm", n_clients=3, rounds=1,
+                    client_ranks=(2, 4, 8), backend="spmd")
+    with pytest.raises(ValueError, match="homogeneous"):
+        run_federated(cfg, fed, pub, clients, te, batch_size=16)
+
+
+def test_unknown_backend_rejected(case_study):
+    cfg, pub, clients, te = case_study
+    fed = FedConfig(framework="fedllm", backend="async")
+    with pytest.raises(ValueError, match="backend"):
+        run_federated(cfg, fed, pub, clients, te, batch_size=16)
+
+
+def test_spmd_handles_ragged_client_data(case_study):
+    """Clients with unequal batch counts run via the padded/masked scan
+    and still produce the sequential backend's exact ledger."""
+    cfg, pub, clients, te = case_study
+    ragged = [
+        {k: v[: 16 + 16 * ci] for k, v in c.items()}
+        for ci, c in enumerate(clients)
+    ]
+    fed = FedConfig(framework="fedllm", n_clients=3, rounds=1, lora_rank=4,
+                    lora_dropout=0.0, seed=0)
+    seq = run_federated(cfg, fed, pub, ragged, te, batch_size=16,
+                        eval_batch=64)
+    spmd = run_federated(cfg, dataclasses.replace(fed, backend="spmd"),
+                         pub, ragged, te, batch_size=16, eval_batch=64)
+    assert seq.ledger.per_client_round() == spmd.ledger.per_client_round()
+    assert seq.client_flops == spmd.client_flops
+    assert abs(seq.final_accuracy - spmd.final_accuracy) <= 1e-3

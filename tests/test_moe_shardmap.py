@@ -21,8 +21,8 @@ SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys; sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np, dataclasses
-    from jax.sharding import AxisType
     from repro.configs.base import ModelConfig
+    from repro.launch.mesh import activate_mesh
     from repro.models import moe
 
     for E, M in ((8, 2), (4, 4), (2, 4)):
@@ -34,9 +34,8 @@ SUBPROC = textwrap.dedent("""
         p = moe.init_moe(jax.random.PRNGKey(0), cfg_b)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32)) * 0.5
         ob, ab = moe.moe_fwd(p, cfg_b, x)
-        mesh = jax.make_mesh((8 // M, M), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = jax.make_mesh((8 // M, M), ("data", "model"))
+        with activate_mesh(mesh):
             os_, as_ = jax.jit(lambda p, x: moe.moe_fwd(p, cfg_s, x))(p, x)
         np.testing.assert_allclose(np.asarray(ob), np.asarray(os_),
                                    rtol=5e-4, atol=5e-4)

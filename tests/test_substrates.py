@@ -125,7 +125,10 @@ def test_checkpoint_roundtrip_and_retention():
 # sharding policy (AbstractMesh: no devices needed)
 # --------------------------------------------------------------------------- #
 def _abstract_mesh():
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:  # new jax: (sizes, names); old jax: ((name, size), ...) pairs
+        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        return jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
 
 
 @pytest.mark.parametrize("arch,embed_spec", [
