@@ -1,24 +1,47 @@
-"""Kernel microbenchmarks.  On CPU the Pallas kernels run in interpret
-mode (Python emulation — not a performance number), so the timed paths
-are the jitted XLA reference implementations; kernel correctness is
-asserted against them in the same pass.  On a real TPU the same harness
-times the compiled Pallas kernels."""
+"""Kernel microbenchmarks — forward AND fwd+bwd per kernel.
+
+On CPU the Pallas kernels run in interpret mode (Python emulation — not
+a performance number), so the timed paths are the jitted XLA reference
+implementations; kernel correctness (including the custom_vjp backward
+kernels) is asserted against them in the same pass.  On a real TPU the
+same harness times the compiled Pallas kernels, and the backward rows
+time the fused custom_vjp backward kernels.
+
+Besides the CSV lines on stdout, emits ``BENCH_kernels.json``
+(name -> us_per_call) so subsequent PRs have a perf trajectory to
+regress against; CI uploads it as a workflow artifact.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.kernels import ref
 
 ON_TPU = jax.default_backend() == "tpu"
+OUT_PATH = os.environ.get("REPRO_BENCH_KERNELS_OUT", "BENCH_kernels.json")
+
+RESULTS: dict = {}
+
+
+def record(name: str, us: float, derived: str = "") -> None:
+    RESULTS[name] = round(us, 1)
+    common.emit(name, us, derived)
+
+
+def _time(fn, *args):
+    _, us = common.timed(lambda: jax.block_until_ready(fn(*args)))
+    return us
 
 
 def run():
     ks = jax.random.split(jax.random.PRNGKey(0), 8)
 
-    # lora matmul
+    # ---------------- lora matmul (fwd + fwd/bwd) ------------------------ #
     M, K, N, r = 512, 1024, 512, 8
     x = jax.random.normal(ks[0], (M, K))
     w = jax.random.normal(ks[1], (K, N)) * 0.05
@@ -26,65 +49,93 @@ def run():
     b = jax.random.normal(ks[3], (r, N)) * 0.05
     if ON_TPU:
         from repro.kernels.lora_matmul import lora_matmul
-        fn = jax.jit(lambda *t: lora_matmul(*t, interpret=False))
+        base = lambda *t: lora_matmul(*t, interpret=False)
     else:
-        fn = jax.jit(ref.lora_matmul_ref)
-    _, us = common.timed(lambda: jax.block_until_ready(fn(x, w, a, b)))
+        base = ref.lora_matmul_ref
+    fwd = jax.jit(base)
+    bwd = jax.jit(jax.grad(lambda *t: jnp.sum(base(*t)),
+                           argnums=(0, 1, 2, 3)))
     flops = 2 * M * N * (K + r) + 2 * M * K * r
-    common.emit("kernel_lora_matmul_512x1024x512_r8", us,
-                f"{flops/us*1e-3:.1f}GFLOP/s")
+    us = _time(fwd, x, w, a, b)
+    record("kernel_lora_matmul_512x1024x512_r8", us,
+           f"{flops/us*1e-3:.1f}GFLOP/s")
+    us = _time(bwd, x, w, a, b)
+    record("kernel_lora_matmul_512x1024x512_r8_bwd", us,
+           f"{3*flops/us*1e-3:.1f}GFLOP/s")
 
-    # flash attention
+    # ---------------- flash attention (fwd + fwd/bwd) -------------------- #
     BH, S, D = 8, 512, 64
     q = jax.random.normal(ks[4], (BH, S, D))
     k = jax.random.normal(ks[5], (BH, S, D))
     v = jax.random.normal(ks[6], (BH, S, D))
     if ON_TPU:
         from repro.kernels.flash_attention import flash_attention
-        fa = jax.jit(lambda *t: flash_attention(*t, interpret=False))
+        fa = lambda *t: flash_attention(*t, interpret=False)
     else:
-        fa = jax.jit(lambda *t: ref.attention_ref(*t))
-    _, us = common.timed(lambda: jax.block_until_ready(fa(q, k, v)))
-    common.emit("kernel_flash_attention_8x512x64_causal", us,
-                f"{2*2*BH*S*S*D/us*1e-3:.1f}GFLOP/s")
+        fa = ref.attention_ref
+    us = _time(jax.jit(fa), q, k, v)
+    record("kernel_flash_attention_8x512x64_causal", us,
+           f"{2*2*BH*S*S*D/us*1e-3:.1f}GFLOP/s")
+    fa_bwd = jax.jit(jax.grad(lambda *t: jnp.sum(fa(*t)),
+                              argnums=(0, 1, 2)))
+    us = _time(fa_bwd, q, k, v)
+    record("kernel_flash_attention_8x512x64_causal_bwd", us,
+           f"{5*2*BH*S*S*D/us*1e-3:.1f}GFLOP/s")
 
-    # kd loss over a big vocab
+    # ---------------- kd loss over a big vocab (fwd + fwd/bwd) ----------- #
     R, V = 256, 32_768
     t = jax.random.normal(ks[7], (R, V))
     s = t + 0.1 * jax.random.normal(ks[0], (R, V))
-    fkd = jax.jit(lambda a_, b_: ref.kd_loss_rows_ref(a_, b_, 2.0))
-    _, us = common.timed(lambda: jax.block_until_ready(fkd(t, s)))
-    common.emit("kernel_kd_loss_256x32768_T2", us,
-                f"{R*V*2*4/us*1e-3:.1f}GB/s_stream")
+    if ON_TPU:
+        from repro.kernels.kd_loss import kd_loss_rows
+        fkd = lambda a_, b_: kd_loss_rows(a_, b_, temperature=2.0,
+                                          interpret=False)
+    else:
+        fkd = lambda a_, b_: ref.kd_loss_rows_ref(a_, b_, 2.0)
+    us = _time(jax.jit(fkd), t, s)
+    record("kernel_kd_loss_256x32768_T2", us,
+           f"{R*V*2*4/us*1e-3:.1f}GB/s_stream")
+    fkd_bwd = jax.jit(jax.grad(lambda a_, b_: jnp.sum(fkd(a_, b_)),
+                               argnums=(0, 1)))
+    us = _time(fkd_bwd, t, s)
+    record("kernel_kd_loss_256x32768_T2_bwd", us,
+           f"{R*V*2*4*2/us*1e-3:.1f}GB/s_stream")
 
-    # rglru scan
+    # ---------------- rglru scan (fwd-only kernel) ----------------------- #
     B, S_, W = 4, 1024, 512
     aa = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S_, W)))
     bb = jax.random.normal(ks[2], (B, S_, W)) * 0.1
     h0 = jnp.zeros((B, W))
-    fr = jax.jit(ref.rglru_scan_ref)
-    _, us = common.timed(lambda: jax.block_until_ready(fr(aa, bb, h0)))
-    common.emit("kernel_rglru_scan_4x1024x512", us,
-                f"{B*S_*W/us:.1f}Melem/s")
+    us = _time(jax.jit(ref.rglru_scan_ref), aa, bb, h0)
+    record("kernel_rglru_scan_4x1024x512", us, f"{B*S_*W/us:.1f}Melem/s")
 
-    # rwkv6 scan
+    # ---------------- rwkv6 scan (fwd-only kernel) ----------------------- #
     BH2, S2, D2 = 8, 256, 64
     args = [jax.random.normal(jax.random.fold_in(ks[3], i), (BH2, S2, D2))
             for i in range(3)]
     lw = -jax.nn.softplus(jax.random.normal(ks[4], (BH2, S2, D2)))
     u = 0.1 * jax.random.normal(ks[5], (BH2, D2))
-    fw = jax.jit(ref.rwkv6_scan_ref)
-    _, us = common.timed(
-        lambda: jax.block_until_ready(fw(args[0], args[1], args[2], lw, u)))
-    common.emit("kernel_rwkv6_scan_8x256x64", us,
-                f"{2*BH2*S2*D2*D2*2/us*1e-3:.1f}GFLOP/s")
+    us = _time(jax.jit(ref.rwkv6_scan_ref), args[0], args[1], args[2], lw, u)
+    record("kernel_rwkv6_scan_8x256x64", us,
+           f"{2*BH2*S2*D2*D2*2/us*1e-3:.1f}GFLOP/s")
 
-    # quantize
+    # ---------------- quantize + fused top-k ----------------------------- #
     x2 = jax.random.normal(ks[6], (1024, 2048))
-    fq = jax.jit(lambda t_: ref.quantize_rows_ref(t_, 8))
-    _, us = common.timed(lambda: jax.block_until_ready(fq(x2)))
-    common.emit("kernel_quantize_1024x2048_int8", us,
-                f"{x2.size*4/us*1e-3:.1f}GB/s")
+    us = _time(jax.jit(lambda t_: ref.quantize_rows_ref(t_, 8)), x2)
+    record("kernel_quantize_1024x2048_int8", us,
+           f"{x2.size*4/us*1e-3:.1f}GB/s")
+    if ON_TPU:
+        from repro.kernels.quantize import topk_quantize_rows
+        ftq = lambda t_: topk_quantize_rows(t_, k=32, interpret=False)
+    else:
+        ftq = lambda t_: ref.topk_quantize_rows_ref(t_, 32)
+    us = _time(jax.jit(ftq), x2)
+    record("kernel_topk_quantize_1024x2048_k32", us,
+           f"{x2.size*4/us*1e-3:.1f}GB/s")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_PATH} ({len(RESULTS)} entries)")
 
 
 if __name__ == "__main__":

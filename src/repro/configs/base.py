@@ -75,10 +75,22 @@ class ModelConfig:
     dtype: str = "bfloat16"
     citation: str = ""
 
+    # -- kernel dispatch ---------------------------------------------------
+    # Which implementation the hot paths (LoRA projection, attention, KD
+    # loss) trace through:  ``xla`` — reference jnp paths;  ``pallas`` —
+    # the fused differentiable Pallas kernels (kernels/ops.py);  ``auto``
+    # — pallas on a real TPU backend, xla elsewhere (interpret-mode
+    # Pallas is a correctness tool, not a fast path).
+    kernel_policy: str = "auto"
+
     # ------------------------------------------------------------------ #
     def __post_init__(self):
         if self.family not in FAMILIES:
             raise ValueError(f"unknown family {self.family!r}")
+        if self.kernel_policy not in ("xla", "pallas", "auto"):
+            raise ValueError(
+                f"unknown kernel_policy {self.kernel_policy!r} "
+                "(expected 'xla' | 'pallas' | 'auto')")
         if self.head_dim == 0 and self.n_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         if self.lru_width == 0:
@@ -247,4 +259,6 @@ class TrainConfig:
     param_dtype: str = "bfloat16"
     loss_dtype: str = "float32"
     shard_lm_head_vocab: bool = True
-    use_flash_kernel: bool = False   # interpret-mode Pallas off the hot path
+    # NOTE: the vestigial ``use_flash_kernel`` flag was retired in favor of
+    # ``ModelConfig.kernel_policy`` (xla | pallas | auto), which the round
+    # engine and model facade thread through kernels/ops.py.

@@ -2,19 +2,28 @@
 research directions, implemented as first-class features:
 
 - top-k logit sparsification (generative KD: keep k << V predictions)
+- fused top-k + int8/int4 quantization (KD b3 upload; device kernel)
 - int8/int4 symmetric per-row quantization (logits, activations, grads)
+  with real nibble packing for int4 — the reported wire bytes are the
+  size of an actually transmittable payload
 - softened-label compression (temperature + float16)
 Each returns (compressed, meta) plus exact wire-size accounting, and a
 ``decompress`` that reconstructs the dense tensor the receiver trains on.
+All paths are pure jnp or Pallas kernels — nothing bounces through host
+numpy, so compression composes with jit and never forces a device sync.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import math
 
 import jax
 import jax.numpy as jnp
 
 NEG_FILL = -1e9
+
+
+def _n_rows(x: jax.Array) -> int:
+    return math.prod(x.shape[:-1])
 
 
 # --------------------------------------------------------------------------- #
@@ -46,32 +55,119 @@ def _scatter_last(dense, idx, vals):
 
 
 # --------------------------------------------------------------------------- #
+# Fused top-k + int quantization (KD b3 upload — one device kernel)
+# --------------------------------------------------------------------------- #
+def topk_quantize(logits: jax.Array, k: int, bits: int = 8):
+    """logits (..., V) -> ({"values_q","indices","scale","dim"}, wire).
+
+    Selection + quantization stay on-device: the fused Pallas kernel
+    (kernels/quantize.topk_quantize_rows) under the ``pallas`` policy,
+    the bit-identical XLA reference otherwise.  The wire size is the
+    packed payload: k quantized values (nibble-packed for int4) + k
+    int32 indices + one fp32 scale per row."""
+    assert bits in (4, 8)
+    from repro.kernels import ops as kernel_ops
+    q, idx, scale = kernel_ops.topk_quantize(logits, k, bits=bits)
+    if bits == 4:
+        q = pack_int4(q)
+    rows = _n_rows(logits)
+    wire = q.size + idx.size * 4 + rows * 4
+    return {"values_q": q, "indices": idx, "scale": scale,
+            "dim": logits.shape[-1], "k": k}, int(wire)
+
+
+def topk_dequantize(comp) -> jax.Array:
+    q = comp["values_q"]
+    if q.dtype == jnp.uint8:                     # int4-packed
+        q = unpack_int4(q, comp["k"])
+    vals = q.astype(jnp.float32) * comp["scale"]
+    shape = vals.shape[:-1] + (comp["dim"],)
+    dense = jnp.full(shape, NEG_FILL, jnp.float32)
+    return _scatter_last(dense, comp["indices"], vals)
+
+
+# --------------------------------------------------------------------------- #
+# int4 nibble packing (two values per byte)
+# --------------------------------------------------------------------------- #
+def pack_int4(q: jax.Array) -> jax.Array:
+    """q int8 (..., C) with values in [-7, 7] -> uint8 (..., ceil(C/2)).
+
+    Even column in the low nibble, odd column in the high nibble (two's
+    complement); odd C is zero-padded.  The packed array is the actual
+    transmittable payload — its ``size`` is what the ledger records."""
+    C = q.shape[-1]
+    if C % 2:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+    u = q.astype(jnp.int32) & 0xF
+    pair = u.reshape(*u.shape[:-1], -1, 2)
+    return (pair[..., 0] | (pair[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array, C: int) -> jax.Array:
+    """Inverse of ``pack_int4``: uint8 (..., P) -> int8 (..., C)."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    inter = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], -1)[..., :C]
+    return jnp.where(inter > 7, inter - 16, inter).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------------- #
 # Symmetric per-row quantization (SSIV.C.2)
 # --------------------------------------------------------------------------- #
 def quantize(x: jax.Array, bits: int = 8):
-    """(..., d) -> ({"q", "scale"}, wire_bytes).  Per-row absmax scaling.
-    The pure-jnp reference for kernels/quantize.py."""
+    """(..., d) -> ({"q"|"q4", "scale"}, wire_bytes).  Per-row absmax
+    scaling (the jnp reference for kernels/quantize.py; int4 under the
+    ``pallas`` policy packs in-kernel).  int4 payloads are nibble-packed
+    so ``wire`` equals the payload size exactly (two values per byte +
+    4-byte row scales)."""
     assert bits in (4, 8)
+    if bits == 4:
+        from repro.kernels import ops as kernel_ops
+        if kernel_ops.use_pallas() and x.shape[-1] % 2 == 0:
+            # in-kernel nibble packing: quantize + pack in one pass
+            packed, scale = kernel_ops.quantize_pack4(x)
+        else:
+            q, scale = _quantize_jnp(x, bits)
+            packed = pack_int4(q)
+        return {"q4": packed, "scale": scale,
+                "dim": x.shape[-1]}, quant_wire_bytes(x.shape, bits)
+    q, scale = _quantize_jnp(x, bits)
+    return {"q": q, "scale": scale}, quant_wire_bytes(x.shape, bits)
+
+
+def quant_wire_bytes(shape, bits: int) -> int:
+    """Exact transmittable size of a per-row quantized (..., d) tensor:
+    nibble-packed payload (ceil per row for int4) + 4-byte row scales."""
+    rows = math.prod(shape[:-1])
+    return rows * ((shape[-1] * bits + 7) // 8) + rows * 4
+
+
+def _quantize_jnp(x: jax.Array, bits: int):
     qmax = (1 << (bits - 1)) - 1
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
     scale = jnp.maximum(absmax / qmax, 1e-12)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
-    q = q.astype(jnp.int8)
-    n_rows = 1
-    for s in x.shape[:-1]:
-        n_rows *= s
-    wire = x.size * bits // 8 + n_rows * 4          # payload + row scales
-    return {"q": q, "scale": scale.astype(jnp.float32)}, int(wire)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
 
 
 def dequantize(comp) -> jax.Array:
+    if "q4" in comp:
+        q = unpack_int4(comp["q4"], comp["dim"])
+        return q.astype(jnp.float32) * comp["scale"]
     return comp["q"].astype(jnp.float32) * comp["scale"]
 
 
 def quant_roundtrip(x: jax.Array, bits: int = 8):
-    """Straight-through quantize->dequantize with wire-size accounting."""
-    comp, wire = quantize(x, bits)
-    return dequantize(comp).astype(x.dtype), wire
+    """Straight-through quantize->dequantize with wire-size accounting.
+
+    Skips materializing the packed payload: the roundtrip value only
+    needs the unpacked int levels (the split activation hot path runs
+    this per microbatch), and the wire figure is pure arithmetic —
+    identical to what ``quantize`` reports for the same tensor."""
+    q, scale = _quantize_jnp(x, bits)
+    deq = (q.astype(jnp.float32) * scale).astype(x.dtype)
+    return deq, quant_wire_bytes(x.shape, bits)
 
 
 # --------------------------------------------------------------------------- #

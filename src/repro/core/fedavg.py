@@ -27,10 +27,25 @@ from repro.peft import lora as lora_lib
 
 def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
     """Returns dict of jitted fns: train_step, eval_step, logits_fn,
-    kd_step (distill to teacher logits)."""
+    kd_step (distill to teacher logits).
+
+    Every returned step enters the model's kernel-policy scope
+    (kernels/ops.policy_scope) for its whole body, so parts of a step
+    outside Model.forward — e.g. the KD loss in kd_step — dispatch to
+    the same kernels as the forward even when the step is called
+    directly rather than through core/rounds.run_federated."""
     cfg = model.cfg
     task_loss = tasks.get_loss_fn(task)
     opt_init, opt_update = make_optimizer(fed.optimizer)
+
+    from repro.kernels import ops as kernel_ops
+
+    def _scoped(fn):
+        @functools.wraps(fn)
+        def call(*args, **kwargs):
+            with kernel_ops.policy_scope(cfg.kernel_policy):
+                return fn(*args, **kwargs)
+        return call
 
     def _bind(base, lt, rng=None):
         rank = _tree_rank(lt, fed.lora_rank)
@@ -92,9 +107,11 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
         return new_lt, new_opt, loss
 
-    return {"train_step": train_step, "train_step_impl": train_step_impl,
-            "eval_step": eval_step, "logits_fn": logits_fn,
-            "kd_step": kd_step, "opt_init": opt_init,
+    return {"train_step": _scoped(train_step),
+            "train_step_impl": train_step_impl,
+            "eval_step": _scoped(eval_step),
+            "logits_fn": _scoped(logits_fn),
+            "kd_step": _scoped(kd_step), "opt_init": opt_init,
             "opt_update": opt_update, "bind": _bind}
 
 

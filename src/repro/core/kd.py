@@ -15,6 +15,7 @@ wins for classification and loses for generative tasks.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -30,51 +31,72 @@ def client_logits(fns, base, lt, public: Dict, batch_size: int = 64):
     """b2: knowledge representations on the public dataset, row i holding
     the logits of public sample i.  Batches arrive permuted (seed-0
     shuffle), so the concatenation is scattered back to original row
-    order — distill() indexes teachers by original row id."""
+    order — distill() indexes teachers by original row id.  Stays on
+    device end-to-end (the scatter is a jnp gather-free ``.at[].set``),
+    so the b3 compression that follows never syncs through the host."""
     outs = []
     for batch in epoch_batches(public, batch_size, seed=0,
                                drop_remainder=False):
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        outs.append(np.asarray(fns["logits_fn"](base, lt, jb)))
-    stacked = np.concatenate(outs, axis=0)
-    out = np.empty_like(stacked)
-    out[_epoch_perm(len(public["tokens"]), 0)] = stacked
-    return out
+        outs.append(fns["logits_fn"](base, lt, jb))
+    stacked = jnp.concatenate(outs, axis=0)
+    perm = jnp.asarray(_epoch_perm(len(public["tokens"]), 0))
+    return jnp.zeros_like(stacked).at[perm].set(stacked)
 
 
-def compress_for_wire(logits: np.ndarray, fed: FedConfig):
-    """b3 compression (SSIV.B.2 features).  Returns (logits', wire_bytes)."""
+def compress_for_wire(logits, fed: FedConfig):
+    """b3 compression (SSIV.B.2 features).  Returns (logits', wire_bytes).
+
+    Pure device path: with both ``logit_topk`` and ``logit_quant_bits``
+    set, selection + quantization run as ONE fused Pallas kernel
+    (kernels/quantize.topk_quantize_rows); no ``np.asarray`` anywhere, so
+    the KD round loop performs zero host transfers for logit upload."""
     x = jnp.asarray(logits)
-    if fed.logit_topk and fed.logit_topk < logits.shape[-1]:
+    if fed.logit_topk and fed.logit_topk < x.shape[-1]:
+        if fed.logit_quant_bits:
+            comp, wire = compression.topk_quantize(x, fed.logit_topk,
+                                                   fed.logit_quant_bits)
+            return compression.topk_dequantize(comp), wire
         comp, wire = compression.topk_compress(x, fed.logit_topk)
-        return np.asarray(compression.topk_decompress(comp)), wire
+        return compression.topk_decompress(comp), wire
     if fed.logit_quant_bits:
-        deq, wire = compression.quant_roundtrip(x, fed.logit_quant_bits)
-        return np.asarray(deq), wire
-    return logits, logits.size * 4
+        return compression.quant_roundtrip(x, fed.logit_quant_bits)
+    return x, x.size * 4
 
 
-def aggregate_knowledge(client_logits_list: List[np.ndarray],
+def logit_wire_bytes(shape, fed: FedConfig) -> int:
+    """Arithmetic twin of ``compress_for_wire``'s byte accounting for a
+    logit tensor of ``shape`` — use when only the ledger entry is needed
+    (e.g. the b7 download of already-produced global logits) so no
+    compression pipeline runs just to be discarded."""
+    n, d = math.prod(shape[:-1]), shape[-1]
+    topk = fed.logit_topk if (fed.logit_topk and fed.logit_topk < d) else 0
+    return metrics.logit_bytes(n, d, topk, fed.logit_quant_bits)
+
+
+def aggregate_knowledge(client_logits_list: List,
                         weights: Optional[List[float]] = None,
-                        entropy_filter_frac: float = 0.0) -> np.ndarray:
+                        entropy_filter_frac: float = 0.0) -> jax.Array:
     """b4: refined global knowledge.  Weighted mean of client logits, with
     optional entropy-based filtering (SSIV.B.3): samples whose mean
     predictive entropy is in the highest ``frac`` quantile are replaced by
-    the lowest-entropy client's logits (most-confident knowledge wins)."""
+    the lowest-entropy client's logits (most-confident knowledge wins).
+    jnp end-to-end, so the b3 -> b4 chain stays on the accelerator."""
     if weights is None:
         weights = [1.0] * len(client_logits_list)
-    w = np.asarray(weights, np.float64)
+    w = jnp.asarray(weights, jnp.float32)
     w = w / w.sum()
-    stack = np.stack(client_logits_list)                   # (C, N, D)
-    agg = np.einsum("c,cnd->nd", w, stack).astype(np.float32)
+    stack = jnp.stack([jnp.asarray(x) for x in client_logits_list])
+    agg = jnp.einsum("c,cnd->nd", w,
+                     stack.astype(jnp.float32)).astype(jnp.float32)
     if entropy_filter_frac > 0.0:
-        ent = _entropy(stack)                              # (C, N)
+        ent = _entropy_jnp(stack)                          # (C, N)
         mean_ent = ent.mean(axis=0)
-        thresh = np.quantile(mean_ent, 1.0 - entropy_filter_frac)
+        thresh = jnp.quantile(mean_ent, 1.0 - entropy_filter_frac)
         noisy = mean_ent >= thresh
         best_client = ent.argmin(axis=0)                   # (N,)
-        chosen = stack[best_client, np.arange(stack.shape[1])]
-        agg[noisy] = chosen[noisy]
+        chosen = stack[best_client, jnp.arange(stack.shape[1])]
+        agg = jnp.where(noisy[:, None], chosen, agg)
     return agg
 
 
@@ -87,11 +109,9 @@ def aggregate_knowledge_batched(stacked, weights) -> jax.Array:
     return jnp.einsum("c,cnd->nd", w, jnp.asarray(stacked, jnp.float32))
 
 
-def _entropy(logits: np.ndarray) -> np.ndarray:
-    x = logits - logits.max(axis=-1, keepdims=True)
-    p = np.exp(x)
-    p /= p.sum(axis=-1, keepdims=True)
-    return -(p * np.log(np.maximum(p, 1e-12))).sum(axis=-1)
+def _entropy_jnp(logits) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -(jnp.exp(logp) * logp).sum(axis=-1)
 
 
 def distill(fns, base, lt, opt_state, public: Dict, teacher: np.ndarray,

@@ -121,11 +121,16 @@ class RoundMetrics:
 def logit_bytes(n_samples: int, logit_dim: int, topk: int = 0,
                 quant_bits: int = 0) -> int:
     """Communication size of a logit set (paper SSIII.B: classification vs
-    generative task dimensionality; SSIV.B.2 compression options)."""
-    if topk:
+    generative task dimensionality; SSIV.B.2 compression options).
+    Sub-byte payloads are nibble-packed per row (ceil), matching
+    core/compression's actual wire payloads."""
+    if topk and quant_bits:
+        # fused top-k + int quantization: packed values + indices + scale
+        per = (topk * quant_bits + 7) // 8 + topk * 4 + 4
+    elif topk:
         per = topk * (4 + 4)                       # value + index
     elif quant_bits:
-        per = logit_dim * quant_bits // 8 + 4      # + per-row scale
+        per = (logit_dim * quant_bits + 7) // 8 + 4    # + per-row scale
     else:
         per = logit_dim * 4
     return n_samples * per

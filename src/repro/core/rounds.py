@@ -68,19 +68,25 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     base = model.init(key)
     targets = fed.lora_targets or lora_lib.default_targets(cfg)
 
-    if backend == "spmd":
-        from repro.core import rounds_spmd  # lazy: avoids import cycle
-        return rounds_spmd.run_spmd(model, base, cfg, fed, targets, public,
-                                    clients_data, test, task, batch_size,
-                                    eval_batch, verbose)
-    if fed.framework == "fedllm":
-        return _run_fedllm(model, base, cfg, fed, targets, clients_data,
-                           test, task, batch_size, eval_batch, verbose)
-    if fed.framework == "kd":
-        return _run_kd(model, base, cfg, fed, targets, public, clients_data,
-                       test, task, batch_size, eval_batch, verbose)
-    return _run_split(model, base, cfg, fed, targets, clients_data,
-                      test, task, batch_size, eval_batch, verbose)
+    # Resolve ModelConfig.kernel_policy for every trace in the run: both
+    # execution backends and all three frameworks train through the fused
+    # Pallas fwd+bwd kernels when the policy selects them.
+    from repro.kernels import ops as kernel_ops
+    with kernel_ops.policy_scope(cfg.kernel_policy):
+        if backend == "spmd":
+            from repro.core import rounds_spmd  # lazy: avoids import cycle
+            return rounds_spmd.run_spmd(model, base, cfg, fed, targets,
+                                        public, clients_data, test, task,
+                                        batch_size, eval_batch, verbose)
+        if fed.framework == "fedllm":
+            return _run_fedllm(model, base, cfg, fed, targets, clients_data,
+                               test, task, batch_size, eval_batch, verbose)
+        if fed.framework == "kd":
+            return _run_kd(model, base, cfg, fed, targets, public,
+                           clients_data, test, task, batch_size, eval_batch,
+                           verbose)
+        return _run_split(model, base, cfg, fed, targets, clients_data,
+                          test, task, batch_size, eval_batch, verbose)
 
 
 # --------------------------------------------------------------------------- #
@@ -213,9 +219,10 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
         server_lt, server_opt, _ = kd_mod.distill(
             fns, base, server_lt, server_opt, public, teacher,
             fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
-        # b6/b7: global logits back to clients
+        # b6/b7: global logits back to clients (wire size is arithmetic —
+        # no compression pipeline runs just to be discarded)
         glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
-        glob_wire, _ = kd_mod.compress_for_wire(glob, fed)[1], None
+        glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
         for ci in range(n_clients):
             ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
         # b8: client-side KD

@@ -110,16 +110,16 @@ def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
 def _batched_public_logits(kfns, base, stacked_lt, public, batch_size):
     """b2/b6 for every client at once — same batch order and original-
     row-order scatter as kd.client_logits, giving (C, N, D) with row i
-    holding public sample i's logits."""
+    holding public sample i's logits.  Device arrays end-to-end: the b3
+    compression that follows never syncs through the host."""
     outs = []
     for batch in epoch_batches(public, batch_size, seed=0,
                                drop_remainder=False):
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        outs.append(np.asarray(kfns["batched_logits"](base, stacked_lt, jb)))
-    stacked = np.concatenate(outs, axis=1)
-    out = np.empty_like(stacked)
-    out[:, kd_mod._epoch_perm(len(public["tokens"]), 0)] = stacked
-    return out
+        outs.append(kfns["batched_logits"](base, stacked_lt, jb))
+    stacked = jnp.concatenate(outs, axis=1)
+    perm = jnp.asarray(kd_mod._epoch_perm(len(public["tokens"]), 0))
+    return jnp.zeros_like(stacked).at[:, perm].set(stacked)
 
 
 def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
@@ -193,16 +193,16 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
             uploaded.append(lg)
             cost[ci].add_train(cfg, n_tok[ci], n_lora)
             cost[ci].add_fwd(cfg, pub_tok)
-        # b4: knowledge processing as a client-axis reduction
-        teacher = np.asarray(kd_mod.aggregate_knowledge_batched(
-            np.stack(uploaded), weights))
+        # b4: knowledge processing as a client-axis reduction (on device)
+        teacher = kd_mod.aggregate_knowledge_batched(
+            jnp.stack(uploaded), weights)
         # b5: server-side distillation into the global model
         server_lt, server_opt, _ = kd_mod.distill(
             fns, base, server_lt, server_opt, public, teacher,
             fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
-        # b6/b7: global logits back to every client
+        # b6/b7: global logits back to every client (arithmetic wire size)
         glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
-        glob_wire = kd_mod.compress_for_wire(glob, fed)[1]
+        glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
         ledger.record_batch(rnd, "logits", M.DOWN, [glob_wire] * n_clients)
         # b8: vmapped client-side distillation
         stacked_lt, stacked_opt = _batched_distill(

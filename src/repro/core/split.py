@@ -160,17 +160,35 @@ def make_split_fns(model: Model, fed: FedConfig,
         new_s, s_opt2 = opt_update(s_grads, s_opt, s_lt, fed.lr)
         return new_c, new_s, c_opt2, s_opt2, loss
 
-    split_train_step = jax.jit(split_step)
+    jitted_split_step = jax.jit(split_step)
+
+    def split_train_step(*args, **kwargs):
+        # same depth contract as fedavg.make_fns: the whole step body —
+        # both sub-model halves and the quantized boundary — traces
+        # under the model's kernel-policy scope even when called
+        # directly rather than through core/rounds.run_federated.
+        from repro.kernels import ops as kernel_ops
+        with kernel_ops.policy_scope(cfg.kernel_policy):
+            return jitted_split_step(*args, **kwargs)
 
     def wire_bytes_per_batch(batch_shape: Tuple[int, int]) -> Tuple[int, int]:
-        """(activation_up, grad_down) bytes for one batch (c2/c4)."""
+        """(activation_up, grad_down) bytes for one batch (c2/c4).
+
+        int4 payloads are nibble-packed (core/compression.pack_int4):
+        two values per byte, per-row ceil — the exact transmittable
+        size, not the old ``bits // 8 == 0`` undercount."""
         B, S = batch_shape
         if cfg.is_encoder_decoder:
             S = cfg.encoder_seq_len
-        elem = B * S * cfg.d_model
-        per = (qbits // 8) if qbits else 4
-        scale = B * S * 4 if qbits else 0
-        return elem * per + scale, elem * per + scale
+        rows, d = B * S, cfg.d_model
+        if qbits == 4:
+            payload = rows * ((d + 1) // 2)
+        elif qbits:
+            payload = rows * d * qbits // 8
+        else:
+            payload = rows * d * 4
+        scale = rows * 4 if qbits else 0
+        return payload + scale, payload + scale
 
     return {"split_train_step": split_train_step, "split_step": split_step,
             "opt_init": opt_init, "n_client_groups": L,

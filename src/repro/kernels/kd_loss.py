@@ -13,6 +13,17 @@ keeping only five (br, 1) running statistics per row:
     KL = u/z_t - (m_t + log z_t) + (m_s + log z_s),  x T^2
 
 Grid (rows/br, V/bv), vocab innermost.
+
+Differentiable via ``jax.custom_vjp``: the forward emits the five row
+statistics as residuals (5 floats per row — nothing (R, V)-shaped is
+saved), and the backward streams the same vocab chunks a second time,
+reconstructing the chunk's teacher/student probabilities from the saved
+statistics instead of materializing them:
+
+    dL/dt_j = g · T · p_j (log p_j - log q_j - KL)
+    dL/ds_j = g · T · (q_j - p_j)
+
+with p = softmax(t/T), q = softmax(s/T).
 """
 from __future__ import annotations
 
@@ -21,13 +32,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _kernel(t_ref, s_ref, o_ref, mt_ref, zt_ref, ms_ref, zs_ref, u_ref, *,
-            inv_temp: float, t2: float, nv: int):
+def _fwd_kernel(t_ref, s_ref, o_ref, mt_ref, zt_ref, ms_ref, zs_ref, u_ref,
+                *, inv_temp: float, t2: float, nv: int):
     vi = pl.program_id(1)
 
     @pl.when(vi == 0)
@@ -65,26 +75,103 @@ def _kernel(t_ref, s_ref, o_ref, mt_ref, zt_ref, ms_ref, zs_ref, u_ref, *,
         o_ref[...] = (kl * t2).astype(o_ref.dtype)
 
 
+def _fwd_call(teacher, student, temperature: float, br: int, bv: int,
+              interpret: bool):
+    """Returns (rows (R, 1), mt, zt, ms, zs, u — each (R, 1) fp32).
+
+    The five running statistics live in the output blocks themselves
+    (block index (i, 0) is j-independent, so each stays VMEM-resident
+    across the whole vocab sweep) — they double as the VJP residuals.
+    """
+    R, V = teacher.shape
+    assert R % br == 0 and V % bv == 0, (R, V, br, bv)
+    kernel = functools.partial(_fwd_kernel, inv_temp=1.0 / temperature,
+                               t2=temperature * temperature, nv=V // bv)
+    stat = jax.ShapeDtypeStruct((R, 1), jnp.float32)
+    stat_spec = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br, V // bv),
+        in_specs=[pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bv), lambda i, j: (i, j))],
+        out_specs=[stat_spec] * 6,
+        out_shape=[stat] * 6,
+        interpret=interpret,
+    )(teacher, student)
+
+
+# --------------------------------------------------------------------------- #
+# Backward kernel
+# --------------------------------------------------------------------------- #
+def _bwd_kernel(t_ref, s_ref, mt_ref, zt_ref, ms_ref, zs_ref, u_ref, g_ref,
+                dt_ref, ds_ref, *, inv_temp: float, temp: float):
+    t = t_ref[...].astype(jnp.float32) * inv_temp       # (br, bv)
+    s = s_ref[...].astype(jnp.float32) * inv_temp
+    lzt = mt_ref[...] + jnp.log(zt_ref[...])            # (br, 1) teacher LSE
+    lzs = ms_ref[...] + jnp.log(zs_ref[...])
+    logp = t - lzt
+    logq = s - lzs
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    kl = u_ref[...] / zt_ref[...] - lzt + lzs           # unscaled KL (br, 1)
+    g = g_ref[...] * temp                               # d(T^2·KL)/dt~ · T⁻¹
+    dt_ref[...] = (g * p * (logp - logq - kl)).astype(dt_ref.dtype)
+    ds_ref[...] = (g * (q - p)).astype(ds_ref.dtype)
+
+
+def _bwd_call(teacher, student, stats, g, temperature: float, br: int,
+              bv: int, interpret: bool):
+    R, V = teacher.shape
+    kernel = functools.partial(_bwd_kernel, inv_temp=1.0 / temperature,
+                               temp=temperature)
+    stat_spec = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br, V // bv),
+        in_specs=[pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bv), lambda i, j: (i, j))]
+        + [stat_spec] * 6,
+        out_specs=[pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, bv), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((R, V), teacher.dtype),
+                   jax.ShapeDtypeStruct((R, V), student.dtype)],
+        interpret=interpret,
+    )(teacher, student, *stats, g)
+
+
+# --------------------------------------------------------------------------- #
+# custom_vjp plumbing
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _kd_loss_rows(teacher, student, temperature, br, bv, interpret):
+    return _fwd_call(teacher, student, temperature, br, bv, interpret)[0]
+
+
+def _kd_loss_rows_fwd(teacher, student, temperature, br, bv, interpret):
+    rows, *stats = _fwd_call(teacher, student, temperature, br, bv,
+                             interpret)
+    return rows, (teacher, student, tuple(stats))
+
+
+def _kd_loss_rows_bwd(temperature, br, bv, interpret, res, g):
+    teacher, student, stats = res
+    dt, ds = _bwd_call(teacher, student, stats, g.astype(jnp.float32),
+                       temperature, br, bv, interpret)
+    return dt, ds
+
+
+_kd_loss_rows.defvjp(_kd_loss_rows_fwd, _kd_loss_rows_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("temperature", "br", "bv",
                                               "interpret"))
 def kd_loss_rows(teacher, student, *, temperature: float = 1.0,
                  br: int = 128, bv: int = 2048, interpret: bool = True):
     """teacher/student: (R, V) logits -> per-row KL (R, 1), already x T^2.
 
-    Mean over rows (with masking) is applied by the ops wrapper."""
+    Mean over rows (with masking) is applied by the ops wrapper.
+    Differentiable w.r.t. both logit sets (streaming backward kernel)."""
     R, V = teacher.shape
     br = min(br, R)
     bv = min(bv, V)
-    assert R % br == 0 and V % bv == 0, (R, V, br, bv)
-    kernel = functools.partial(_kernel, inv_temp=1.0 / temperature,
-                               t2=temperature * temperature, nv=V // bv)
-    return pl.pallas_call(
-        kernel,
-        grid=(R // br, V // bv),
-        in_specs=[pl.BlockSpec((br, bv), lambda i, j: (i, j)),
-                  pl.BlockSpec((br, bv), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32) for _ in range(5)],
-        interpret=interpret,
-    )(teacher, student)
+    return _kd_loss_rows(teacher, student, temperature, br, bv, interpret)

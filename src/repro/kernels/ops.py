@@ -2,10 +2,24 @@
 model-layer layouts to kernel layouts, choose block shapes, and select
 interpret mode (Python emulation on CPU; compiled on real TPU).
 
-These are the TPU hot paths; the XLA paths in models/ remain the default
-for CPU execution and for the SPMD dry-run lowering.
+This module is also the **kernel dispatch layer**: ``ModelConfig``
+carries a ``kernel_policy`` (``"xla" | "pallas" | "auto"``) which the
+round engine / model facade resolve into an ambient policy scope here
+(mirroring models/common's ``shard_hints`` pattern).  The LoRA
+projection (peft/lora.lora_apply), attention (models/attention) and the
+KD loss (models/loss.kd_kl) consult ``use_pallas()`` at trace time, so
+every framework trains *through* the fused fwd+bwd kernels when the
+policy selects them — the three hot-path kernels are differentiable via
+``jax.custom_vjp`` (kernels/{lora_matmul,kd_loss,flash_attention}).
+
+``auto`` resolves to ``pallas`` on a real TPU backend and ``xla``
+everywhere else (interpret-mode Pallas is a correctness tool, not a fast
+path).
 """
 from __future__ import annotations
+
+import contextlib
+import math
 
 import jax
 import jax.numpy as jnp
@@ -19,21 +33,88 @@ from repro.kernels import rwkv6_scan as _rw
 
 INTERPRET = jax.default_backend() != "tpu"
 
+# --------------------------------------------------------------------------- #
+# Kernel policy (ModelConfig.kernel_policy -> ambient dispatch scope)
+# --------------------------------------------------------------------------- #
+POLICIES = ("xla", "pallas", "auto")
+_ACTIVE = "xla"
+
+
+def resolve(policy: str) -> str:
+    """``auto`` -> ``pallas`` on TPU, ``xla`` elsewhere."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown kernel_policy {policy!r} "
+                         f"(expected one of {POLICIES})")
+    if policy == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return policy
+
+
+@contextlib.contextmanager
+def policy_scope(policy: str):
+    """Make ``policy`` the ambient kernel policy while tracing/executing.
+
+    Entered by core/rounds.run_federated (covers both execution backends)
+    and by models/factory.Model.forward (direct model use)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = resolve(policy)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def use_pallas() -> bool:
+    return _ACTIVE == "pallas"
+
+
+# --------------------------------------------------------------------------- #
+# Block-shape selection
+# --------------------------------------------------------------------------- #
+def fit_block(n: int, cap: int, align: int = 128) -> int:
+    """Block size for a dim of ``n`` under a VMEM budget of ``cap``:
+    the largest divisor of ``n`` that is <= ``cap``, preferring
+    lane-aligned (multiple-of-``align``) divisors.  This is the
+    chunk-size fallback for dims the default block doesn't divide:
+    e.g. V=151936 with bv=2048 yields 128 (aligned) rather than
+    silently streaming the whole vocab through one VMEM block — the
+    memory wall the kernels exist to avoid.
+
+    Dims with only pathological divisors (primes, 50257-style vocabs
+    whose best divisor would shred the grid) fall back to the whole dim
+    as a single block rather than a degenerate tiny-block grid: a
+    too-large block is slow-but-correct, a width-1 grid of thousands of
+    steps is neither."""
+    cap = min(cap, n)
+    best = 1
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            if d % align == 0:
+                return d
+            if best == 1:
+                best = d
+    # no aligned divisor: accept the plain one unless it is degenerate
+    if best >= max(cap // 8, 1):
+        return best
+    return n
+
 
 def lora_matmul(x, w, a, b, block_m: int = 128, block_k: int = 512,
                 block_n: int = 128):
-    """x: (..., K) -> (..., N) with LoRA fused.  Pads M to the tile."""
+    """x: (..., K) -> (..., N) with LoRA fused.  Pads M to the tile.
+
+    Differentiable end-to-end (fused Pallas backward kernels)."""
     *lead, K = x.shape
-    M = 1
-    for s in lead:
-        M *= s
+    M = math.prod(lead)
     xf = x.reshape(M, K)
     bm = min(block_m, M)
     pad = (-M) % bm
     if pad:
         xf = jnp.pad(xf, ((0, pad), (0, 0)))
-    out = _lm.lora_matmul(xf, w, a, b, bm=bm, bk=min(block_k, K),
-                          bn=min(block_n, w.shape[1]), interpret=INTERPRET)
+    out = _lm.lora_matmul(xf, w, a, b, bm=bm, bk=fit_block(K, block_k),
+                          bn=fit_block(w.shape[1], block_n),
+                          interpret=INTERPRET)
     if pad:
         out = out[:M]
     return out.reshape(*lead, w.shape[1])
@@ -41,21 +122,26 @@ def lora_matmul(x, w, a, b, block_m: int = 128, block_k: int = 512,
 
 def mha_attention(q, k, v, causal: bool = True, window: int = 0,
                   q_offset: int = 0, bq: int = 128, bkv: int = 128):
-    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) -> (B, Sq, H, D).
+
+    Differentiable (recompute-based flash backward, GQA-aware)."""
     B, Sq, H, D = q.shape
     _, Skv, KV, _ = k.shape
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
     out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
-                              q_offset=q_offset, bq=bq, bkv=bkv,
+                              q_offset=q_offset, bq=fit_block(Sq, bq),
+                              bkv=fit_block(Skv, bkv),
                               interpret=INTERPRET)
     return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
 
 
 def kd_loss(teacher, student, temperature: float = 1.0, mask=None,
             br: int = 128, bv: int = 2048):
-    """teacher/student: (..., V) -> scalar mean KD loss (masked)."""
+    """teacher/student: (..., V) -> scalar mean KD loss (masked).
+
+    Differentiable w.r.t. both logit sets (streaming backward kernel)."""
     V = teacher.shape[-1]
     t = teacher.reshape(-1, V)
     s = student.reshape(-1, V)
@@ -65,9 +151,8 @@ def kd_loss(teacher, student, temperature: float = 1.0, mask=None,
     if pad:
         t = jnp.pad(t, ((0, pad), (0, 0)))
         s = jnp.pad(s, ((0, pad), (0, 0)))
-    bvv = bv if V % bv == 0 else V          # fall back to single chunk
-    rows = _kd.kd_loss_rows(t, s, temperature=temperature, br=brr, bv=bvv,
-                            interpret=INTERPRET)[:R, 0]
+    rows = _kd.kd_loss_rows(t, s, temperature=temperature, br=brr,
+                            bv=fit_block(V, bv), interpret=INTERPRET)[:R, 0]
     if mask is not None:
         m = mask.reshape(-1).astype(jnp.float32)
         return jnp.sum(rows * m) / jnp.maximum(jnp.sum(m), 1.0)
@@ -77,10 +162,9 @@ def kd_loss(teacher, student, temperature: float = 1.0, mask=None,
 def rglru(a, b, h0, bw: int = 128, bt: int = 128):
     """a, b: (B, S, W); h0: (B, W) -> (h (B,S,W), h_final)."""
     W = a.shape[-1]
-    bww = bw if W % bw == 0 else W
     S = a.shape[1]
-    btt = bt if S % bt == 0 else S
-    return _rg.rglru_scan(a, b, h0, bw=bww, bt=btt, interpret=INTERPRET)
+    return _rg.rglru_scan(a, b, h0, bw=fit_block(W, bw),
+                          bt=fit_block(S, bt), interpret=INTERPRET)
 
 
 def rwkv6(r, k, v, logw, u, bt: int = 64):
@@ -88,9 +172,8 @@ def rwkv6(r, k, v, logw, u, bt: int = 64):
     B, S, H, D = r.shape
     flat = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
     uf = jnp.tile(u, (B, 1))
-    btt = bt if S % bt == 0 else S
     y, Sf = _rw.rwkv6_scan(flat(r), flat(k), flat(v), flat(logw), uf,
-                           bt=btt, interpret=INTERPRET)
+                           bt=fit_block(S, bt), interpret=INTERPRET)
     return (y.reshape(B, H, S, D).transpose(0, 2, 1, 3),
             Sf.reshape(B, H, D, D))
 
@@ -98,10 +181,43 @@ def rwkv6(r, k, v, logw, u, bt: int = 64):
 def quantize(x, bits: int = 8, br: int = 8):
     """x: (..., C) -> (q int8, scale fp32 (..., 1))."""
     *lead, C = x.shape
-    R = 1
-    for s in lead:
-        R *= s
+    R = math.prod(lead)
     xf = x.reshape(R, C)
-    brr = br if R % br == 0 else 1
-    q, sc = _q.quantize_rows(xf, bits=bits, br=brr, interpret=INTERPRET)
+    q, sc = _q.quantize_rows(xf, bits=bits, br=fit_block(R, br, align=1),
+                             interpret=INTERPRET)
     return q.reshape(*lead, C), sc.reshape(*lead, 1)
+
+
+def quantize_pack4(x, br: int = 8):
+    """x: (..., C) -> (packed uint8 (..., ceil(C/2)), scale (..., 1)).
+
+    Odd C is zero-padded by one column before packing."""
+    *lead, C = x.shape
+    R = math.prod(lead)
+    xf = x.reshape(R, C)
+    if C % 2:
+        xf = jnp.pad(xf, ((0, 0), (0, 1)))
+    q, sc = _q.quantize_pack4_rows(xf, br=fit_block(R, br, align=1),
+                                   interpret=INTERPRET)
+    return q.reshape(*lead, (C + 1) // 2), sc.reshape(*lead, 1)
+
+
+def topk_quantize(x, k: int, bits: int = 8, br: int = 8):
+    """x: (..., V) -> (q int8 (..., k), idx int32 (..., k), scale (..., 1)).
+
+    The fused KD b3 upload: selection + quantization on-device.  Under
+    the ``pallas`` policy this is the one-pass Pallas kernel; otherwise
+    the XLA reference (lax.top_k + symmetric rounding) — bit-identical
+    outputs (tests/test_kernels.py), still device-resident, but without
+    interpret-mode emulation cost on CPU."""
+    from repro.kernels import ref as _ref
+    if not use_pallas():
+        return _ref.topk_quantize_rows_ref(x, k, bits)
+    *lead, V = x.shape
+    R = math.prod(lead)
+    xf = x.reshape(R, V)
+    q, idx, sc = _q.topk_quantize_rows(xf, k=k, bits=bits,
+                                       br=fit_block(R, br, align=1),
+                                       interpret=INTERPRET)
+    return (q.reshape(*lead, k), idx.reshape(*lead, k),
+            sc.reshape(*lead, 1))

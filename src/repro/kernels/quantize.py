@@ -1,9 +1,16 @@
-"""Per-row symmetric int8 quantization Pallas TPU kernel — the wire
-format of Split-FedLLM activation/gradient transfer (paper SSIV.C.2).
+"""Per-row symmetric quantization Pallas TPU kernels — the wire formats
+of Split-FedLLM activation/gradient transfer (paper SSIV.C.2) and
+KD-FedLLM logit upload (SSIV.B.2).
 
-One pass: per-row absmax -> scale -> rounded int8 payload.  Grid over
-row blocks; whole feature dim per block (d_model <= 18432 fits VMEM
-comfortably at (8, d) fp32 tiles).
+- ``quantize_rows``: one pass per row block: absmax -> scale -> rounded
+  int8 payload.  Grid over row blocks; whole feature dim per block
+  (d_model <= 18432 fits VMEM comfortably at (8, d) fp32 tiles).
+- ``quantize_pack4_rows``: int4 variant that packs two nibbles per byte
+  inside the kernel, so the emitted payload IS the wire payload.
+- ``topk_quantize_rows``: fused top-k + int8 row kernel for the KD b3
+  logit upload — selection, scaling and rounding all happen on-device in
+  one pass (k rounds of masked row-max; no sort, Mosaic-friendly), so
+  the client's knowledge upload never bounces through host memory.
 """
 from __future__ import annotations
 
@@ -12,6 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
 
 
 def _kernel(x_ref, q_ref, s_ref, *, qmax: float):
@@ -37,6 +46,101 @@ def quantize_rows(x, *, bits: int = 8, br: int = 8, interpret: bool = True):
         out_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
                    pl.BlockSpec((br, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+# --------------------------------------------------------------------------- #
+# int4 with in-kernel nibble packing
+# --------------------------------------------------------------------------- #
+def _pack4_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (br, C)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 7.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -7.0, 7.0).astype(jnp.int32)
+    u = q & 0xF                                           # two's-comp nibble
+    br, C = u.shape
+    pair = u.reshape(br, C // 2, 2)
+    q_ref[...] = (pair[:, :, 0] | (pair[:, :, 1] << 4)).astype(jnp.uint8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def quantize_pack4_rows(x, *, br: int = 8, interpret: bool = True):
+    """x: (R, C), C even -> (packed uint8 (R, C//2), scale fp32 (R, 1)).
+
+    Two int4 values per byte: even column in the low nibble, odd column
+    in the high nibble — the exact transmittable Split-FedLLM payload."""
+    R, C = x.shape
+    assert C % 2 == 0, C
+    br = min(br, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        _pack4_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, C // 2), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, C // 2), jnp.uint8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+# --------------------------------------------------------------------------- #
+# Fused top-k + int8 (KD b3 logit upload)
+# --------------------------------------------------------------------------- #
+def _topk_kernel(x_ref, v_ref, i_ref, s_ref, *, k: int, qmax: float):
+    x = x_ref[...].astype(jnp.float32)                    # (br, C)
+    br, C = x.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (br, C), 1)
+
+    def body(t, carry):
+        xc, vals, idxs = carry
+        m = jnp.max(xc, axis=-1, keepdims=True)           # (br, 1)
+        idx = jnp.min(jnp.where(xc == m, col, C), axis=-1,
+                      keepdims=True)                      # first argmax
+        vals = jax.lax.dynamic_update_slice(vals, m, (0, t))
+        idxs = jax.lax.dynamic_update_slice(idxs, idx, (0, t))
+        xc = jnp.where(col == idx, NEG_INF, xc)
+        return xc, vals, idxs
+
+    _, vals, idxs = jax.lax.fori_loop(
+        0, k, body, (x, jnp.zeros((br, k), jnp.float32),
+                     jnp.zeros((br, k), jnp.int32)))
+    absmax = jnp.max(jnp.abs(vals), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    v_ref[...] = jnp.clip(jnp.round(vals / scale), -qmax,
+                          qmax).astype(jnp.int8)
+    i_ref[...] = idxs
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bits", "br", "interpret"))
+def topk_quantize_rows(x, *, k: int, bits: int = 8, br: int = 8,
+                       interpret: bool = True):
+    """x: (R, C) -> (q int8 (R, k), idx int32 (R, k), scale fp32 (R, 1)).
+
+    Top-k by value (ties broken toward the lower index, matching
+    ``jax.lax.top_k``), then symmetric per-row quantization of the k
+    selected values.  Selection is k rounds of masked row-max — O(kC)
+    VPU work, no sort — so the whole b3 compression runs as one kernel.
+    """
+    R, C = x.shape
+    assert 0 < k <= C, (k, C)
+    br = min(br, R)
+    assert R % br == 0
+    qmax = float((1 << (bits - 1)) - 1)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, qmax=qmax),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, k), lambda i: (i, 0)),
+                   pl.BlockSpec((br, k), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, k), jnp.int8),
+                   jax.ShapeDtypeStruct((R, k), jnp.int32),
                    jax.ShapeDtypeStruct((R, 1), jnp.float32)],
         interpret=interpret,
     )(x)

@@ -86,3 +86,13 @@ def quantize_rows_ref(x, bits: int = 8):
     scale = jnp.maximum(absmax / qmax, 1e-12)
     q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
+
+
+def topk_quantize_rows_ref(x, k: int, bits: int = 8):
+    """Top-k by value then symmetric int quantization of the k values."""
+    qmax = float((1 << (bits - 1)) - 1)
+    vals, idxs = jax.lax.top_k(x.astype(jnp.float32), k)
+    absmax = jnp.max(jnp.abs(vals), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(vals / scale), -qmax, qmax).astype(jnp.int8)
+    return q, idxs.astype(jnp.int32), scale.astype(jnp.float32)

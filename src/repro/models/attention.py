@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import common
 from repro.models.common import NEG_INF, apply_rope, hint, mm
 
@@ -121,7 +122,9 @@ def attention_fwd(params, cfg: ModelConfig, x, positions,
         k = apply_rope(k, positions, cfg.rope_theta)
     q = hint(q, ("pod", "data"), None, "model", None)
     k = hint(k, ("pod", "data"), None, None, None)
-    if S > Q_CHUNK:
+    if kernel_ops.use_pallas():
+        out = kernel_ops.mha_attention(q, k, v, causal=True, window=window)
+    elif S > Q_CHUNK:
         out = _attend_chunked(q, k, v, 0, window)
     else:
         out = _attend(q, k, v, common.causal_mask(S, S, window=window))
@@ -139,7 +142,10 @@ def attention_fwd_noncausal(params, cfg: ModelConfig, x, positions):
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    out = _attend(q, k, v, None)
+    if kernel_ops.use_pallas():
+        out = kernel_ops.mha_attention(q, k, v, causal=False)
+    else:
+        out = _attend(q, k, v, None)
     return mm(out.reshape(B, S, h * hd), params["wo"])
 
 
@@ -149,7 +155,10 @@ def cross_attention_fwd(params, cfg: ModelConfig, x, enc_kv):
     h, hd = cfg.n_heads, cfg.head_dim
     q = mm(x, params["wq"]).reshape(B, S, h, hd)
     k, v = enc_kv
-    out = _attend(q, k, v, None)
+    if kernel_ops.use_pallas():
+        out = kernel_ops.mha_attention(q, k, v, causal=False)
+    else:
+        out = _attend(q, k, v, None)
     return mm(out.reshape(B, S, h * hd), params["wo"])
 
 

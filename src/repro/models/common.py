@@ -156,14 +156,14 @@ def mm(x: jax.Array, w) -> jax.Array:
 
     The LoRA path computes ``x@W + (x@A)@B`` without materializing
     ``W + BA`` — gradients flow to A/B only when W is a closed-over constant
-    (see core/fedavg.train_step).  The Pallas ``lora_matmul`` kernel fuses
-    exactly this computation for the TPU hot path (kernels/lora_matmul.py).
+    (see core/fedavg.train_step).  Dispatch between the XLA einsum chain
+    and the fused differentiable Pallas ``lora_matmul`` kernel lives in
+    peft/lora.lora_apply, driven by the ambient kernel policy
+    (``ModelConfig.kernel_policy`` via kernels/ops.policy_scope).
     """
     if isinstance(w, dict) and "a" in w:
-        base = jnp.einsum("...d,df->...f", x, w["w"].astype(x.dtype))
-        lo = jnp.einsum("...d,dr->...r", x, w["a"].astype(x.dtype))
-        lo = jnp.einsum("...r,rf->...f", lo, w["b"].astype(x.dtype))
-        return base + lo
+        from repro.peft.lora import lora_apply
+        return lora_apply(x, w["w"], w["a"], w["b"])
     return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
 
 

@@ -39,14 +39,18 @@ class Model:
     # ------------------------------------------------------------------ #
     def forward(self, params, batch: Dict[str, Any], scan_layers: bool = True,
                 remat: str = "none"):
-        if self.cfg.is_encoder_decoder:
-            return encdec.encdec_forward(params, self.cfg, batch["tokens"],
-                                         batch["enc_embeds"],
-                                         scan_layers=scan_layers)
-        return transformer.forward(params, self.cfg, batch["tokens"],
-                                   img_embeds=batch.get("img_embeds"),
-                                   prefix_embeds=batch.get("prefix_embeds"),
-                                   scan_layers=scan_layers, remat=remat)
+        from repro.kernels import ops as kernel_ops
+        with kernel_ops.policy_scope(self.cfg.kernel_policy):
+            if self.cfg.is_encoder_decoder:
+                return encdec.encdec_forward(params, self.cfg,
+                                             batch["tokens"],
+                                             batch["enc_embeds"],
+                                             scan_layers=scan_layers)
+            return transformer.forward(
+                params, self.cfg, batch["tokens"],
+                img_embeds=batch.get("img_embeds"),
+                prefix_embeds=batch.get("prefix_embeds"),
+                scan_layers=scan_layers, remat=remat)
 
     # ------------------------------------------------------------------ #
     def init_cache(self, params, batch_size: int, max_len: int,

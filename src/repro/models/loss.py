@@ -39,8 +39,14 @@ def kd_kl(student_logits, teacher_logits, temperature: float = 1.0,
     """KL(teacher || student) with temperature, mean over tokens.
 
     Both logits (..., V).  The (soft) distillation loss of KD-FedLLMs
-    (paper SS II.B); kernels/kd_loss.py fuses this over vocab chunks.
+    (paper SS II.B); under kernel policy ``pallas`` this dispatches to
+    the streaming vocab-chunked Pallas kernel (differentiable w.r.t.
+    both logit sets via its custom_vjp backward).
     """
+    from repro.kernels import ops as kernel_ops
+    if kernel_ops.use_pallas():
+        return kernel_ops.kd_loss(teacher_logits, student_logits,
+                                  temperature=float(temperature), mask=mask)
     t = jnp.asarray(temperature, jnp.float32)
     ts = teacher_logits.astype(jnp.float32) / t
     ss = student_logits.astype(jnp.float32) / t

@@ -30,6 +30,24 @@ DEFAULT_TARGETS: Tuple[str, ...] = ("wq", "wk", "wv")
 RWKV_TARGETS: Tuple[str, ...] = ("w_r", "w_k", "w_v", "w_g")
 
 
+def lora_apply(x: jax.Array, w: jax.Array, a: jax.Array,
+               b: jax.Array) -> jax.Array:
+    """The LoRA projection hot path: ``x@W + (x@A)@B`` (scale folded into
+    ``b`` at bind time).
+
+    Under kernel policy ``pallas`` (kernels/ops.policy_scope) this runs
+    the fused Pallas kernel — one HBM pass over W with the rank-r panel
+    VMEM-resident, differentiable via its custom_vjp backward kernels.
+    Otherwise the XLA einsum chain (never materializing W + BA)."""
+    from repro.kernels import ops as kernel_ops
+    if kernel_ops.use_pallas() and w.ndim == 2:
+        return kernel_ops.lora_matmul(x, w, a, b)
+    base = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    lo = jnp.einsum("...d,dr->...r", x, a.astype(x.dtype))
+    lo = jnp.einsum("...r,rf->...f", lo, b.astype(x.dtype))
+    return base + lo
+
+
 def default_targets(cfg) -> Tuple[str, ...]:
     """Paper-faithful targets, adapted per family (DESIGN SSArch-applicability):
     attention archs -> QKV; attention-free RWKV -> time-mix projections."""

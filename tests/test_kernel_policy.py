@@ -1,0 +1,113 @@
+"""KernelPolicy end-to-end: a full federated round for every framework
+on both execution backends trains through the Pallas kernels under
+``kernel_policy="pallas"`` (interpret mode on CPU) and produces ledger
+bytes identical to the ``xla`` policy — the dispatch layer changes the
+compute path, never the protocol."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, ModelConfig
+from repro.core.rounds import run_federated
+from repro.data import banking77, partition
+from repro.kernels import ops
+
+CFG = ModelConfig(name="policy-t", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=192,
+                  qkv_bias=True, activation="gelu", norm="layernorm",
+                  use_rope=False, max_position_embeddings=64)
+
+
+def _setup():
+    pub = banking77.generate(24, CFG.vocab_size, 12, seed=0)
+    tr = banking77.generate(48, CFG.vocab_size, 12, seed=1)
+    te = banking77.generate(16, CFG.vocab_size, 12, seed=2)
+    return pub, partition.iid_partition(tr, 2, seed=0), te
+
+
+def test_policy_resolution():
+    assert ops.resolve("xla") == "xla"
+    assert ops.resolve("pallas") == "pallas"
+    assert ops.resolve("auto") in ("xla", "pallas")
+    with pytest.raises(ValueError):
+        ops.resolve("cuda")
+    with pytest.raises(ValueError):
+        dataclasses.replace(CFG, kernel_policy="nope")
+    assert not ops.use_pallas()                  # default ambient: xla
+    with ops.policy_scope("pallas"):
+        assert ops.use_pallas()
+    assert not ops.use_pallas()
+
+
+@pytest.mark.parametrize("backend", ["sequential", "spmd"])
+@pytest.mark.parametrize("framework", ["fedllm", "kd", "split"])
+def test_fed_round_pallas_matches_xla_ledger(framework, backend):
+    pub, clients, te = _setup()
+    fed = FedConfig(framework=framework, backend=backend, n_clients=2,
+                    rounds=1, lora_rank=4, lora_dropout=0.0, split_layer=1,
+                    seed=0)
+    results = {}
+    for policy in ("xla", "pallas"):
+        cfg = dataclasses.replace(CFG, kernel_policy=policy)
+        results[policy] = run_federated(cfg, fed, pub, clients, te,
+                                        batch_size=8, eval_batch=8)
+    xla, pal = results["xla"], results["pallas"]
+    assert xla.ledger.total() == pal.ledger.total()
+    assert xla.ledger.by_name() == pal.ledger.by_name()
+    assert xla.ledger.per_client_round() == pal.ledger.per_client_round()
+    for r in pal.history:
+        assert np.isfinite(r.loss) and np.isfinite(r.accuracy)
+    assert xla.client_flops == pal.client_flops
+
+
+def test_kd_b3_compression_stays_on_device():
+    """The b3 upload path must return device arrays (no host numpy)."""
+    import jax
+
+    from repro.core import kd
+    logits = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, 192)).astype(np.float32))
+    for fed in (FedConfig(), FedConfig(logit_topk=8),
+                FedConfig(logit_quant_bits=8),
+                FedConfig(logit_topk=8, logit_quant_bits=8),
+                FedConfig(logit_topk=8, logit_quant_bits=4)):
+        out, wire = kd.compress_for_wire(logits, fed)
+        assert isinstance(out, jax.Array), fed
+        assert wire > 0
+
+
+def test_logit_wire_bytes_matches_compress_for_wire():
+    """The arithmetic b7 accounting must never drift from the actual
+    b3 compression pipeline's reported wire size."""
+    from repro.core import kd
+    logits = jnp.asarray(np.random.default_rng(2).normal(
+        size=(3, 16, 96)).astype(np.float32))
+    for fed in (FedConfig(), FedConfig(logit_topk=8),
+                FedConfig(logit_topk=500),           # topk >= dim: dense
+                FedConfig(logit_quant_bits=8),
+                FedConfig(logit_quant_bits=4),
+                FedConfig(logit_topk=8, logit_quant_bits=8),
+                FedConfig(logit_topk=8, logit_quant_bits=4)):
+        _, wire = kd.compress_for_wire(logits, fed)
+        assert kd.logit_wire_bytes(logits.shape, fed) == wire, fed
+
+
+def test_fused_topk_quant_wire_accounting():
+    """Fused top-k+int8/int4 wire bytes equal the packed payload size."""
+    from repro.core import compression
+    logits = jnp.asarray(np.random.default_rng(1).normal(
+        size=(10, 96)).astype(np.float32))
+    comp8, wire8 = compression.topk_quantize(logits, 8, bits=8)
+    assert wire8 == comp8["values_q"].size + comp8["indices"].size * 4 \
+        + 10 * 4
+    comp4, wire4 = compression.topk_quantize(logits, 8, bits=4)
+    assert comp4["values_q"].dtype == jnp.uint8
+    assert wire4 == comp4["values_q"].size + comp4["indices"].size * 4 \
+        + 10 * 4
+    assert wire4 < wire8
+    # reconstruction keeps the argmax (top-1 survives quantization)
+    dense = compression.topk_dequantize(comp8)
+    np.testing.assert_array_equal(np.asarray(dense.argmax(-1)),
+                                  np.asarray(logits.argmax(-1)))

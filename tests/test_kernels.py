@@ -6,11 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compression
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kd_loss import kd_loss_rows
 from repro.kernels.lora_matmul import lora_matmul
-from repro.kernels.quantize import quantize_rows
+from repro.kernels.quantize import (quantize_pack4_rows, quantize_rows,
+                                    topk_quantize_rows)
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
@@ -133,6 +135,72 @@ def test_quantize_sweep(R, C, bits):
     qr, scr = ref.quantize_rows_ref(x, bits)
     np.testing.assert_allclose(np.asarray(q), np.asarray(qr))
     np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("R,C", [(8, 128), (16, 384), (4, 1000)])
+def test_quantize_pack4_roundtrip(R, C):
+    """In-kernel nibble packing: two int4 per byte, exact unpack."""
+    x = rand(jax.random.PRNGKey(R + C), (R, C), scale=3.0)
+    packed, sc = quantize_pack4_rows(x, br=min(4, R))
+    assert packed.dtype == jnp.uint8 and packed.shape == (R, C // 2)
+    qr, scr = ref.quantize_rows_ref(x, 4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), rtol=1e-6)
+    unpacked = compression.unpack_int4(packed, C)
+    np.testing.assert_array_equal(np.asarray(unpacked), np.asarray(qr))
+    # jnp pack of the reference payload gives bit-identical bytes
+    np.testing.assert_array_equal(
+        np.asarray(compression.pack_int4(qr)), np.asarray(packed))
+
+
+def test_pack_int4_odd_dim_roundtrip():
+    q = jnp.asarray(np.random.default_rng(0).integers(-7, 8, (5, 9)),
+                    jnp.int8)
+    packed = compression.pack_int4(q)
+    assert packed.shape == (5, 5)
+    np.testing.assert_array_equal(
+        np.asarray(compression.unpack_int4(packed, 9)), np.asarray(q))
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("R,C,k", [(8, 128, 8), (16, 500, 16), (4, 64, 1)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_topk_quantize_sweep(R, C, k, bits):
+    """Fused top-k+int row kernel == lax.top_k + symmetric quantization."""
+    x = rand(jax.random.PRNGKey(R + C + k), (R, C), scale=3.0)
+    q, idx, sc = topk_quantize_rows(x, k=k, bits=bits, br=min(4, R))
+    qr, idxr, scr = ref.topk_quantize_rows_ref(x, k, bits)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idxr))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(scr), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,cap,expect", [
+    (151936, 2048, 128),      # qwen-style vocab: aligned divisor, not V
+    (32768, 2048, 2048),      # power of two: the cap itself
+    (512, 384, 256),          # aligned divisor under the cap
+    (1000, 512, 500),         # no aligned divisor: largest plain divisor
+    (77, 2048, 77),           # small classification head: whole dim
+    (8191, 2048, 8191),       # prime: whole dim, never a width-1 grid
+    (50257, 2048, 1733),      # gpt2 vocab: best plain divisor, not 1
+])
+def test_fit_block_aligned_divisors(n, cap, expect):
+    got = ops.fit_block(n, cap)
+    assert got == expect and n % got == 0
+
+
+def test_kd_loss_nondivisible_vocab_streams_chunks():
+    """V % bv != 0 must NOT fall back to a single whole-vocab block."""
+    R, V = 16, 1000                               # bv=256 -> fit 250? no:
+    bv = ops.fit_block(V, 256)                    # largest divisor <= 256
+    assert bv < V and V % bv == 0
+    t = rand(jax.random.PRNGKey(0), (R, V), scale=3.0)
+    s = rand(jax.random.PRNGKey(1), (R, V), scale=3.0)
+    loss = ops.kd_loss(t, s, temperature=2.0, br=16, bv=256)
+    expect = jnp.mean(ref.kd_loss_rows_ref(t, s, 2.0))
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
 
 
 # --------------------------------------------------------------------------- #
