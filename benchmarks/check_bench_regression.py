@@ -1,0 +1,94 @@
+"""CI bench-regression gate: diff a fresh ``BENCH_kernels.json``
+(benchmarks/kernels_micro.py) against the committed
+``BENCH_kernels.baseline.json`` and fail when any kernel's fwd or
+fwd+bwd time regresses by more than the threshold (default +30%).
+
+    PYTHONPATH=src:. python benchmarks/kernels_micro.py
+    python benchmarks/check_bench_regression.py [--threshold 1.30]
+
+Escape hatches (see .github/workflows/ci.yml):
+- PR label ``bench-rebaseline`` or the workflow_dispatch ``rebaseline``
+  input skip the gate for an intentional perf trade-off;
+- ``--update`` rewrites the baseline from the fresh run — commit the
+  result in the same PR (also the fix when the runner hardware
+  generation changes and every kernel shifts together).
+
+Kernels present only in the baseline fail the gate (coverage silently
+disappearing is itself a regression); kernels present only in the fresh
+run pass with a note — they join the baseline at the next ``--update``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, fresh: dict, threshold: float):
+    """Returns (regressions, missing, new) lists of report lines."""
+    regressions, missing, new = [], [], []
+    for name, base_us in sorted(baseline.items()):
+        if name not in fresh:
+            missing.append(f"  {name}: in baseline but not in fresh run")
+            continue
+        us = fresh[name]
+        ratio = us / base_us if base_us else float("inf")
+        if ratio > threshold:
+            regressions.append(
+                f"  {name}: {base_us:.1f}us -> {us:.1f}us "
+                f"({(ratio - 1) * 100:+.1f}%, limit "
+                f"{(threshold - 1) * 100:+.0f}%)")
+    for name in sorted(set(fresh) - set(baseline)):
+        new.append(f"  {name}: {fresh[name]:.1f}us (no baseline yet)")
+    return regressions, missing, new
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernels.baseline.json")
+    ap.add_argument("--fresh", default="BENCH_kernels.json")
+    ap.add_argument("--threshold", type=float, default=1.30,
+                    help="fail ratio: fresh/baseline above this fails "
+                         "(1.30 = +30%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh run "
+                         "instead of gating")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(fresh, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"rebaselined {args.baseline} from {args.fresh} "
+              f"({len(fresh)} kernels)")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    regressions, missing, new = compare(baseline, fresh, args.threshold)
+    if new:
+        print(f"{len(new)} new kernel(s) without a baseline:")
+        print("\n".join(new))
+    if missing:
+        print(f"{len(missing)} kernel(s) LOST from the bench:")
+        print("\n".join(missing))
+    if regressions:
+        print(f"{len(regressions)} kernel(s) regressed beyond "
+              f"{(args.threshold - 1) * 100:+.0f}%:")
+        print("\n".join(regressions))
+    if regressions or missing:
+        print("\nIf this slowdown is an accepted trade-off (or the "
+              "runner changed), rebaseline: apply the 'bench-rebaseline' "
+              "PR label to skip the gate, run "
+              "`python benchmarks/check_bench_regression.py --update`, "
+              "and commit BENCH_kernels.baseline.json.")
+        return 1
+    print(f"bench-regression gate OK: {len(baseline)} kernels within "
+          f"{(args.threshold - 1) * 100:+.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -244,6 +244,16 @@ class FedConfig:
     # heterogeneous clients (SS IV.A.2)
     client_ranks: Optional[Tuple[int, ...]] = None
     hetero_agg: str = "zeropad"      # zeropad | svd
+    # aggregation schedule (core/async_agg.py):
+    #   sync  — every client delivers its update in the round it trains
+    #           (the paper-literal parameter-server round)
+    #   async — a seeded per-client delay model decides when each update
+    #           arrives; the server folds arrivals in with polynomial
+    #           staleness-decay weights (FedAsync-style)
+    aggregation: str = "sync"        # sync | async
+    staleness_decay: float = 0.5     # weight = (1 + staleness)^-decay
+    max_staleness: int = 4           # drop updates staler than this;
+    #                                  0 = force synchronous participation
     # optimization
     lr: float = 1e-3
     optimizer: str = "adam"

@@ -111,6 +111,44 @@ def stack_client_batches(clients_data: List[Dict], batch_size: int,
     return batches, valid, n_tok
 
 
+def unstack_tree(stacked):
+    """Inverse of ``stack_trees``: a list of per-client trees from a
+    leading-axis stack (host-side seam between bucketed programs and the
+    cross-bucket harmonization)."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def rank_buckets(ranks: Sequence[int], clients: Sequence[int] = None):
+    """Group client indices by LoRA rank: ``[(rank, [client, ...]), ...]``
+    ordered by first occurrence, client order preserved within a bucket.
+    Each bucket runs as one jitted stacked program (clients in a bucket
+    share tree shapes, so they stack on a leading axis)."""
+    if clients is None:
+        clients = range(len(ranks))
+    out: Dict[int, List[int]] = {}
+    for ci in clients:
+        out.setdefault(ranks[ci], []).append(ci)
+    return list(out.items())
+
+
+def rank_segments(ranks: Sequence[int], clients: Sequence[int] = None):
+    """Maximal runs of equal-rank clients in visit order:
+    ``[(rank, [client, ...]), ...]``.  Split-FedLLM buckets this way —
+    the shared server half is trained client-after-client (paper
+    schedule), so only contiguous equal-rank runs may fuse into one
+    stacked program without reordering the server-half trajectory."""
+    segs: List = []
+    if clients is None:
+        clients = range(len(ranks))
+    for ci in clients:
+        if segs and ranks[ci] == segs[-1][0]:
+            segs[-1][1].append(ci)
+        else:
+            segs.append((ranks[ci], [ci]))
+    return segs
+
+
 def _select(ok, new, old):
     """Keep ``new`` where the step was real, the carry otherwise."""
     return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
@@ -156,6 +194,18 @@ def make_local_update(model: Model, fed: FedConfig,
         return lt, opt, losses.sum() / jnp.maximum(valid.sum(), 1)
 
     return local_update
+
+
+def make_bucket_update(model: Model, fed: FedConfig,
+                       task: str = "classification"):
+    """jit(vmap(local_update)) WITHOUT the closing FedAvg: the building
+    block for per-rank bucketing and async participation, where the
+    cross-client aggregation happens on the host across buckets
+    (core/heterogeneous.harmonize_buckets / core/async_agg).  One
+    program object — jax recompiles per (bucket size, rank, n_steps)
+    signature and caches each variant."""
+    local_update = make_local_update(model, fed, task)
+    return jax.jit(jax.vmap(local_update, in_axes=(None, 0, 0, 0, 0, 0)))
 
 
 # --------------------------------------------------------------------------- #
@@ -270,3 +320,52 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
         return new_c_global, s_lt, s_opt, losses
 
     return round_step
+
+
+def make_split_spmd_segment(model: Model, fed: FedConfig,
+                            task: str = "classification", sfns=None):
+    """One stacked program for a contiguous equal-rank client *segment*
+    of a heterogeneous Split-FedLLM round (``rank_segments``).
+
+    Like ``make_split_spmd_round``'s scan, but (1) every client starts
+    from ``c_init`` — the global client half already truncated to the
+    segment's rank — and (2) the closing FedAvg is left to the host,
+    which harmonizes ranks across segments.  The server carry enters
+    and leaves the program, so threading it segment-after-segment
+    reproduces the sequential backend's exact client visit order.
+
+    Returns seg_step(base_c, base_s, c_init, s_lt, s_opt, batches, keys,
+    valid) -> (stacked_c, s_lt, s_opt, losses).
+    """
+    from repro.core import split as split_mod
+
+    if sfns is None:
+        sfns = split_mod.make_split_fns(model, fed, task)
+    step = sfns["split_step"]
+    opt_init = sfns["opt_init"]
+
+    def seg_step(base_c, base_s, c_init, s_lt, s_opt, batches, keys,
+                 valid):
+        def per_client(carry, client):
+            s_lt, s_opt = carry
+            client_batches, client_keys, client_valid = client
+
+            def body(inner, x):
+                c_lt, c_opt, s_lt, s_opt = inner
+                batch, key, ok = x
+                nc, ns, nco, nso, loss = step(base_c, base_s, c_lt, s_lt,
+                                              c_opt, s_opt, batch, key)
+                return (_select(ok, nc, c_lt), _select(ok, nco, c_opt),
+                        _select(ok, ns, s_lt), _select(ok, nso, s_opt)), \
+                    jnp.where(ok, loss, 0.0)
+
+            (c_lt, _, s_lt, s_opt), losses = jax.lax.scan(
+                body, (c_init, opt_init(c_init), s_lt, s_opt),
+                (client_batches, client_keys, client_valid))
+            return (s_lt, s_opt), (c_lt, losses)
+
+        (s_lt, s_opt), (stacked_c, losses) = jax.lax.scan(
+            per_client, (s_lt, s_opt), (batches, keys, valid))
+        return stacked_c, s_lt, s_opt, losses
+
+    return seg_step

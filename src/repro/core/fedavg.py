@@ -48,7 +48,7 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         return call
 
     def _bind(base, lt, rng=None):
-        rank = _tree_rank(lt, fed.lora_rank)
+        rank = lora_lib.tree_rank(lt, fed.lora_rank)
         return lora_lib.bind(base, lt, fed.lora_alpha, rank,
                              dropout_mask_rng=rng, dropout=fed.lora_dropout)
 
@@ -113,13 +113,6 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
             "logits_fn": _scoped(logits_fn),
             "kd_step": _scoped(kd_step), "opt_init": opt_init,
             "opt_update": opt_update, "bind": _bind}
-
-
-def _tree_rank(lt, default: int) -> int:
-    for leaf in jax.tree.leaves(lt):
-        if leaf.ndim >= 2:
-            return leaf.shape[-1] if leaf.shape[-1] != 0 else default
-    return default
 
 
 # --------------------------------------------------------------------------- #

@@ -46,6 +46,15 @@ class CommLedger:
         for ci, nbytes in enumerate(client_bytes):
             self.record(rnd, ci, name, direction, nbytes)
 
+    def record_bucket(self, rnd: int, clients: "List[int]", name: str,
+                      direction: str, nbytes_each: int):
+        """One bucketed SPMD exchange: every client in a per-rank bucket
+        moves the same (rank-dependent) payload.  Bytes stay
+        per-simulated-client, so heterogeneous runs report Fig. 4
+        identically from either execution backend."""
+        for ci in clients:
+            self.record(rnd, ci, name, direction, nbytes_each)
+
     # -- queries ---------------------------------------------------------
     def total(self, direction: Optional[str] = None) -> int:
         return sum(e.bytes for e in self.events

@@ -28,7 +28,6 @@ from repro.configs.base import FedConfig, ModelConfig
 from repro.core import kd as kd_mod
 from repro.core import metrics as M
 from repro.core import split as split_mod
-from repro.core import tasks
 from repro.core.fedavg import evaluate, fedavg, make_fns
 from repro.core.heterogeneous import aggregate_hetero
 from repro.data import partition as part_mod
@@ -53,6 +52,22 @@ def _to_jax(batch):
     return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
+def client_lora_ranks(fed: FedConfig, n_clients: int) -> List[int]:
+    """Per-client LoRA ranks, validated against the client count."""
+    if not fed.client_ranks:
+        return [fed.lora_rank] * n_clients
+    if len(fed.client_ranks) != n_clients:
+        raise ValueError(
+            f"client_ranks has {len(fed.client_ranks)} entries for "
+            f"{n_clients} clients")
+    if any(r < 1 or r > fed.lora_rank for r in fed.client_ranks):
+        raise ValueError(
+            f"client_ranks must lie in [1, lora_rank={fed.lora_rank}] "
+            f"(got {fed.client_ranks}); weak clients truncate the global "
+            "rank, they never exceed it")
+    return list(fed.client_ranks)
+
+
 def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
                   clients_data: List[Dict], test: Dict,
                   task: str = "classification", batch_size: int = 16,
@@ -63,6 +78,10 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     if backend not in ("sequential", "spmd"):
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'sequential' or 'spmd')")
+    if fed.aggregation not in ("sync", "async"):
+        raise ValueError(f"unknown aggregation {fed.aggregation!r} "
+                         "(expected 'sync' or 'async')")
+    client_lora_ranks(fed, len(clients_data))   # validate early
     model = build_model(cfg)
     key = jax.random.PRNGKey(fed.seed)
     base = model.init(key)
@@ -73,6 +92,12 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     # Pallas fwd+bwd kernels when the policy selects them.
     from repro.kernels import ops as kernel_ops
     with kernel_ops.policy_scope(cfg.kernel_policy):
+        if fed.aggregation == "async":
+            from repro.core import async_agg   # lazy: avoids import cycle
+            return async_agg.run_async(model, base, cfg, fed, targets,
+                                       public, clients_data, test, task,
+                                       batch_size, eval_batch, verbose,
+                                       backend)
         if backend == "spmd":
             from repro.core import rounds_spmd  # lazy: avoids import cycle
             return rounds_spmd.run_spmd(model, base, cfg, fed, targets,
@@ -97,8 +122,7 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
     fns = make_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 1)
     n_clients = len(clients_data)
-    ranks = list(fed.client_ranks) if fed.client_ranks else \
-        [fed.lora_rank] * n_clients
+    ranks = client_lora_ranks(fed, n_clients)
     hetero = len(set(ranks)) > 1
 
     global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
@@ -111,10 +135,8 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
         locals_, weights = [], []
         for ci, data in enumerate(clients_data):
             # a1: distribute global params (truncate rank for weak clients)
-            if ranks[ci] != fed.lora_rank:
-                lt = _truncate_rank(global_lt, ranks[ci], fed.lora_rank)
-            else:
-                lt = global_lt
+            lt = lora_lib.maybe_truncate_rank(global_lt, ranks[ci],
+                                              fed.lora_rank)
             ledger.record(rnd, ci, "lora_params", M.DOWN, M.tree_bytes(lt))
             # a2: local fine-tuning
             opt = fns["opt_init"](lt)
@@ -148,25 +170,6 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
     return FedResult(history, ledger, global_lt, [c.flops for c in cost])
 
 
-def _truncate_rank(lt, rank, orig_rank):
-    """Keep the first ``rank`` components, rescaling for bind's alpha/r:
-    the client binds with alpha/rank, the global delta was alpha/orig, so
-    B shrinks by rank/orig to keep the effective delta scale."""
-    gain = rank / orig_rank
-
-    def rec(l):
-        if isinstance(l, dict) and set(l) == {"a", "b"}:
-            return {"a": l["a"][..., :rank], "b": l["b"][..., :rank, :]
-                    * gain}
-        if isinstance(l, dict):
-            return {k: rec(v) for k, v in l.items()}
-        if isinstance(l, (tuple, list)):
-            return tuple(rec(v) if v is not None else None for v in l)
-        return l
-
-    return rec(lt)
-
-
 # --------------------------------------------------------------------------- #
 # 2) KD-FedLLMs (SSII.B)
 # --------------------------------------------------------------------------- #
@@ -175,10 +178,13 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
     fns = make_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 2)
     n_clients = len(clients_data)
-    logit_dim = tasks.task_logit_dim(task, cfg.vocab_size)
+    # Heterogeneous ranks are KD's native habitat (paper SSIII.A): params
+    # never cross the wire, so each client simply trains at its own rank
+    # and the exchanged knowledge stays rank-agnostic.
+    ranks = client_lora_ranks(fed, n_clients)
 
     client_lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base,
-                                     targets, fed.lora_rank, fed.lora_alpha)
+                                     targets, ranks[ci], fed.lora_alpha)
                   for ci in range(n_clients)]
     client_opts = [fns["opt_init"](lt) for lt in client_lts]
     server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
@@ -252,6 +258,8 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
     sfns = split_mod.make_split_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 3)
     n_clients = len(clients_data)
+    ranks = client_lora_ranks(fed, n_clients)
+    hetero = len(set(ranks)) > 1
     L = sfns["n_client_groups"]
     n_groups = sfns["n_groups"]
     frac_client = L / max(n_groups, 1)
@@ -268,7 +276,11 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
     for rnd in range(fed.rounds):
         locals_, weights = [], []
         for ci, data in enumerate(clients_data):
-            c_lt = c_global
+            # cc3: distribute the global client half (truncated for weak
+            # clients — only the *client-side* adapters are heterogeneous;
+            # the server half never leaves the server)
+            c_lt = lora_lib.maybe_truncate_rank(c_global, ranks[ci],
+                                                fed.lora_rank)
             ledger.record(rnd, ci, "lora_params", M.DOWN,
                           M.tree_bytes(c_lt))                      # cc3
             c_opt = sfns["opt_init"](c_lt)
@@ -291,7 +303,12 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
                           M.tree_bytes(c_lt))                       # cc1
             locals_.append(c_lt)
             weights.append(len(data["tokens"]))
-        c_global = fedavg(locals_, weights)                         # cc2
+        if hetero:                                                  # cc2
+            c_global = aggregate_hetero(locals_, ranks, fed.lora_alpha,
+                                        fed.lora_rank, weights,
+                                        fed.hetero_agg)
+        else:
+            c_global = fedavg(locals_, weights)
         joined = split_mod.join_lora(c_global, s_lt)
         acc, loss = evaluate(fns, base, joined, test, eval_batch)
         history.append(M.RoundMetrics(

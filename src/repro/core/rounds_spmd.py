@@ -15,6 +15,17 @@ ops).  With ``lora_dropout > 0`` the backends draw different dropout
 masks — the sequential loop threads one RNG through clients in visit
 order, the SPMD programs use per-(client, step) keys — so bit-level
 parity is only defined at dropout 0.
+
+Heterogeneous LoRA ranks (``FedConfig.client_ranks``) run as per-rank
+*buckets*: clients sharing a rank stack on one leading axis and run one
+jitted program per bucket, then the buckets harmonize through the same
+``core/heterogeneous.aggregate_hetero`` (zeropad | svd) the sequential
+backend uses.  Split-FedLLM buckets only contiguous equal-rank runs
+(``fed_spmd.rank_segments``) — the shared server half is trained
+client-after-client, and reordering clients would change the paper's
+optimization trajectory.  Wire bytes stay per-simulated-client and
+rank-exact (``CommLedger.record_bucket``), so Fig. 4 extends to the
+heterogeneous setting unchanged.
 """
 from __future__ import annotations
 
@@ -29,6 +40,8 @@ from repro.core import kd as kd_mod
 from repro.core import metrics as M
 from repro.core import split as split_mod
 from repro.core.fedavg import evaluate, make_fns
+from repro.core.heterogeneous import harmonize_buckets
+from repro.core.rounds import FedResult, client_lora_ranks
 from repro.data.loader import epoch_batches
 from repro.peft import lora as lora_lib
 
@@ -36,13 +49,6 @@ from repro.peft import lora as lora_lib
 def run_spmd(model, base, cfg, fed, targets, public: Dict,
              clients_data: List[Dict], test: Dict, task: str,
              batch_size: int, eval_batch: int, verbose: bool):
-    if fed.client_ranks and set(fed.client_ranks) != {fed.lora_rank}:
-        raise ValueError(
-            "backend='spmd' stacks client LoRA trees on one axis and "
-            "needs homogeneous client_ranks equal to lora_rank "
-            f"(got client_ranks={fed.client_ranks}, "
-            f"lora_rank={fed.lora_rank}); use backend='sequential' for "
-            "heterogeneous or truncated ranks")
     runner = {"fedllm": _run_fedllm_spmd, "kd": _run_kd_spmd,
               "split": _run_split_spmd}[fed.framework]
     return runner(model, base, cfg, fed, targets, public, clients_data,
@@ -59,8 +65,11 @@ def _client_weights(clients_data):
 # --------------------------------------------------------------------------- #
 def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
                      test, task, batch_size, eval_batch, verbose):
-    from repro.core.rounds import FedResult
-
+    ranks = client_lora_ranks(fed, len(clients_data))
+    if len(set(ranks)) > 1:
+        return _run_fedllm_spmd_hetero(model, base, cfg, fed, targets,
+                                       clients_data, test, task, batch_size,
+                                       eval_batch, verbose, ranks)
     fns = make_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 1)
     n_clients = len(clients_data)
@@ -104,6 +113,65 @@ def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
     return FedResult(history, ledger, global_lt, [c.flops for c in cost])
 
 
+def _run_fedllm_spmd_hetero(model, base, cfg, fed, targets, clients_data,
+                            test, task, batch_size, eval_batch, verbose,
+                            ranks):
+    """Per-rank bucketed FedLLM round: one jitted stacked program per
+    bucket (vmapped local scans, no in-program FedAvg), then zeropad/svd
+    harmonization across buckets — the sequential backend's exact
+    aggregation code path, fed in client visit order."""
+    fns = make_fns(model, fed, task)
+    key = jax.random.PRNGKey(fed.seed + 1)
+    n_clients = len(clients_data)
+    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                   fed.lora_alpha)
+    bucket_update = fed_spmd.make_bucket_update(model, fed, task)
+    buckets = fed_spmd.rank_buckets(ranks)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    weights, _ = _client_weights(clients_data)
+
+    for rnd in range(fed.rounds):
+        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
+        bucket_trees, bucket_clients = [], []
+        for rank, cis in buckets:
+            # a1: distribute (truncated) global params to the bucket
+            lt0 = lora_lib.maybe_truncate_rank(global_lt, rank,
+                                               fed.lora_rank)
+            lt_bytes = M.tree_bytes(lt0)
+            n_lora = lora_lib.n_params(lt0)
+            ledger.record_bucket(rnd, cis, "lora_params", M.DOWN, lt_bytes)
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [clients_data[ci] for ci in cis], batch_size, seeds)
+            stacked_lt = fed_spmd.stack_for_clients(lt0, len(cis))
+            stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](lt0),
+                                                     len(cis))
+            key, sub = jax.random.split(key)
+            keys = fed_spmd.split_keys(sub, len(cis), valid.shape[1])
+            # a2: one stacked program per bucket
+            new_lt, _, _ = bucket_update(base, stacked_lt, stacked_opt,
+                                         batches, keys, jnp.asarray(valid))
+            # a3: upload — rank-exact per-bucket wire bytes
+            ledger.record_bucket(rnd, cis, "lora_params", M.UP, lt_bytes)
+            for k, ci in enumerate(cis):
+                cost[ci].add_train(cfg, n_tok[k], n_lora)
+            bucket_trees.append(fed_spmd.unstack_tree(new_lt))
+            bucket_clients.append(list(cis))
+        # a4: cross-bucket harmonization (zeropad | svd)
+        global_lt = harmonize_buckets(bucket_trees, bucket_clients, ranks,
+                                      fed.lora_alpha, fed.lora_rank,
+                                      weights, fed.hetero_agg)
+        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[fedllm/spmd-hetero] round {rnd}: acc={acc:.4f} "
+                  f"loss={loss:.4f}")
+    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
+
+
 # --------------------------------------------------------------------------- #
 # 2) KD-FedLLMs
 # --------------------------------------------------------------------------- #
@@ -123,13 +191,15 @@ def _batched_public_logits(kfns, base, stacked_lt, public, batch_size):
 
 
 def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
-                     fed, batch_size, rnd, n_clients):
-    """b8 for every client at once.  Clients distill against the SAME
-    global knowledge over the SAME public batch order (kd.distill), so
-    the per-batch step vmaps cleanly over the client axis.  Per-client
-    RNG streams match the sequential backend's PRNGKey(seed + 31r + ci)."""
+                     fed, batch_size, rnd, client_ids):
+    """b8 for every client in a (bucket-)stack at once.  Clients distill
+    against the SAME global knowledge over the SAME public batch order
+    (kd.distill), so the per-batch step vmaps cleanly over the client
+    axis.  Per-client RNG streams match the sequential backend's
+    PRNGKey(seed + 31r + ci) — ``client_ids`` carries the *global*
+    client indices of the stack's rows."""
     rngs = jnp.stack([jax.random.PRNGKey(fed.seed + 31 * rnd + ci)
-                      for ci in range(n_clients)])
+                      for ci in client_ids])
     n = len(public["tokens"])
     for ep in range(fed.kd_epochs):
         perm = kd_mod._epoch_perm(n, ep)
@@ -148,20 +218,29 @@ def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
 
 def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
                  test, task, batch_size, eval_batch, verbose):
-    from repro.core.rounds import FedResult
-
+    """KD round over per-rank buckets (homogeneous ranks = one bucket,
+    which is exactly the old single-stack program).  Params never cross
+    the wire in KD, so heterogeneity costs nothing at the protocol level
+    — each bucket's stack just trains and produces knowledge at its own
+    rank, and the (C, N, D) logit reduction is rank-agnostic."""
     fns = make_fns(model, fed, task)
     kfns = fed_spmd.make_kd_spmd_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 2)
     n_clients = len(clients_data)
+    ranks = client_lora_ranks(fed, n_clients)
+    buckets = fed_spmd.rank_buckets(ranks)
 
-    stacked_lt = fed_spmd.stack_trees(
-        [lora_lib.init_lora(jax.random.fold_in(key, ci), base, targets,
-                            fed.lora_rank, fed.lora_alpha)
-         for ci in range(n_clients)])
-    one_lt = jax.tree.map(lambda x: x[0], stacked_lt)
-    stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](one_lt),
-                                             n_clients)
+    # per-bucket stacked client state (same fold_in(key, ci) init stream
+    # as the sequential backend, so hetero init is bit-identical)
+    b_lts, b_opts, b_nlora = [], [], []
+    for rank, cis in buckets:
+        lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base,
+                                  targets, rank, fed.lora_alpha)
+               for ci in cis]
+        b_lts.append(fed_spmd.stack_trees(lts))
+        b_opts.append(fed_spmd.stack_for_clients(fns["opt_init"](lts[0]),
+                                                 len(cis)))
+        b_nlora.append(lora_lib.n_params(lts[0]))
     server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
                                    targets, fed.lora_rank, fed.lora_alpha)
     server_opt = fns["opt_init"](server_lt)
@@ -170,29 +249,29 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
         [M.ClientCost() for _ in range(n_clients)]
     weights, _ = _client_weights(clients_data)
     pub_tok = public["tokens"].size
-    n_lora = lora_lib.n_params(server_lt)
 
     for rnd in range(fed.rounds):
-        # b1: vmapped local fine-tuning (params never leave the client)
         seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
-        batches, valid, n_tok = fed_spmd.stack_client_batches(
-            clients_data, batch_size, seeds)
-        key, sub = jax.random.split(key)
-        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
-        stacked_lt, stacked_opt, _ = kfns["client_update"](
-            base, stacked_lt, stacked_opt, batches, keys,
-            jnp.asarray(valid))
-        # b2: batched logit production on the public set -> (C, N, D)
-        logits_cnd = _batched_public_logits(kfns, base, stacked_lt, public,
-                                            eval_batch)
-        # b3: per-simulated-client compression + upload accounting
-        uploaded = []
-        for ci in range(n_clients):
-            lg, wire = kd_mod.compress_for_wire(logits_cnd[ci], fed)
-            ledger.record(rnd, ci, "logits", M.UP, wire)
-            uploaded.append(lg)
-            cost[ci].add_train(cfg, n_tok[ci], n_lora)
-            cost[ci].add_fwd(cfg, pub_tok)
+        uploaded = [None] * n_clients
+        for bi, (rank, cis) in enumerate(buckets):
+            # b1: vmapped local fine-tuning (one program per bucket)
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [clients_data[ci] for ci in cis], batch_size, seeds)
+            key, sub = jax.random.split(key)
+            keys = fed_spmd.split_keys(sub, len(cis), valid.shape[1])
+            b_lts[bi], b_opts[bi], _ = kfns["client_update"](
+                base, b_lts[bi], b_opts[bi], batches, keys,
+                jnp.asarray(valid))
+            # b2: batched logit production on the public set -> (|b|, N, D)
+            logits_cnd = _batched_public_logits(kfns, base, b_lts[bi],
+                                                public, eval_batch)
+            # b3: per-simulated-client compression + upload accounting
+            for k, ci in enumerate(cis):
+                lg, wire = kd_mod.compress_for_wire(logits_cnd[k], fed)
+                ledger.record(rnd, ci, "logits", M.UP, wire)
+                uploaded[ci] = lg
+                cost[ci].add_train(cfg, n_tok[k], b_nlora[bi])
+                cost[ci].add_fwd(cfg, pub_tok)
         # b4: knowledge processing as a client-axis reduction (on device)
         teacher = kd_mod.aggregate_knowledge_batched(
             jnp.stack(uploaded), weights)
@@ -204,12 +283,14 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
         glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
         glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
         ledger.record_batch(rnd, "logits", M.DOWN, [glob_wire] * n_clients)
-        # b8: vmapped client-side distillation
-        stacked_lt, stacked_opt = _batched_distill(
-            kfns, base, stacked_lt, stacked_opt, public, glob, fed,
-            eval_batch, rnd, n_clients)
-        for ci in range(n_clients):
-            cost[ci].add_train(cfg, pub_tok * fed.kd_epochs, n_lora)
+        # b8: vmapped client-side distillation, one program per bucket
+        for bi, (rank, cis) in enumerate(buckets):
+            b_lts[bi], b_opts[bi] = _batched_distill(
+                kfns, base, b_lts[bi], b_opts[bi], public, glob, fed,
+                eval_batch, rnd, cis)
+            for ci in cis:
+                cost[ci].add_train(cfg, pub_tok * fed.kd_epochs,
+                                   b_nlora[bi])
         acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
@@ -224,8 +305,11 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
 # --------------------------------------------------------------------------- #
 def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
                     test, task, batch_size, eval_batch, verbose):
-    from repro.core.rounds import FedResult
-
+    ranks = client_lora_ranks(fed, len(clients_data))
+    if len(set(ranks)) > 1:
+        return _run_split_spmd_hetero(model, base, cfg, fed, targets,
+                                      clients_data, test, task, batch_size,
+                                      eval_batch, verbose, ranks)
     fns = make_fns(model, fed, task)           # for eval on the full model
     sfns = split_mod.make_split_fns(model, fed, task)
     round_step = jax.jit(fed_spmd.make_split_spmd_round(model, fed, task,
@@ -274,5 +358,194 @@ def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
             float(np.mean([c.flops for c in cost]))))
         if verbose:
             print(f"[split/spmd] round {rnd}: acc={acc:.4f} "
+                  f"loss={loss:.4f}")
+    return FedResult(history, ledger, joined, [c.flops for c in cost])
+
+
+# --------------------------------------------------------------------------- #
+# Async executors (core/async_agg.py drives; this backend runs each
+# round's ready-set as per-rank bucketed stacked programs)
+# --------------------------------------------------------------------------- #
+def _grid_keys(fed, rnd, cis, n_steps):
+    """(|bucket|, S) dropout-key grid from the shared per-(client, round)
+    async RNG stream, so sequential/SPMD async agree at dropout 0 and
+    draw equally valid masks otherwise."""
+    from repro.core.async_agg import _local_rng
+    return jnp.stack([jax.random.split(_local_rng(fed, rnd, ci), n_steps)
+                      for ci in cis])
+
+
+def spmd_fedllm_exec(model, base, cfg, fed, targets, clients_data, public,
+                     task, batch_size, eval_batch, ranks):
+    fns = make_fns(model, fed, task)
+    bucket_update = fed_spmd.make_bucket_update(model, fed, task)
+
+    def train(jobs, rnd):
+        by_ci = dict(jobs)
+        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
+        results = {}
+        for rank, cis in fed_spmd.rank_buckets(ranks, list(by_ci)):
+            stacked_lt = fed_spmd.stack_trees([by_ci[ci] for ci in cis])
+            stacked_opt = fed_spmd.stack_for_clients(
+                fns["opt_init"](by_ci[cis[0]]), len(cis))
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [clients_data[ci] for ci in cis], batch_size, seeds)
+            keys = _grid_keys(fed, rnd, cis, valid.shape[1])
+            new_lt, _, _ = bucket_update(base, stacked_lt, stacked_opt,
+                                         batches, keys, jnp.asarray(valid))
+            for k, (ci, t) in enumerate(
+                    zip(cis, fed_spmd.unstack_tree(new_lt))):
+                results[ci] = (t, n_tok[k])
+        return [results[ci] for ci, _ in jobs]
+
+    from types import SimpleNamespace
+    return SimpleNamespace(fns=fns, targets=targets, train=train)
+
+
+def spmd_kd_exec(model, base, cfg, fed, targets, clients_data, public,
+                 task, batch_size, eval_batch, ranks):
+    from repro.core.async_agg import make_kd_state
+
+    ex = make_kd_state(model, base, fed, targets, ranks, public, task)
+    kfns = fed_spmd.make_kd_spmd_fns(model, fed, task)
+    lts, opts = ex.lts, ex.opts
+
+    def train_and_logits(cis, rnd):
+        seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
+        results = {}
+        for rank, bcis in fed_spmd.rank_buckets(ranks, cis):
+            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
+            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [clients_data[ci] for ci in bcis], batch_size, seeds)
+            keys = _grid_keys(fed, rnd, bcis, valid.shape[1])
+            sl, so, _ = kfns["client_update"](base, sl, so, batches, keys,
+                                              jnp.asarray(valid))
+            logits = _batched_public_logits(kfns, base, sl, public,
+                                            eval_batch)
+            for k, (ci, lt, opt) in enumerate(zip(
+                    bcis, fed_spmd.unstack_tree(sl),
+                    fed_spmd.unstack_tree(so))):
+                lts[ci], opts[ci] = lt, opt
+                results[ci] = (logits[k], n_tok[k])
+        return [results[ci] for ci in cis]
+
+    def distill(cis, glob, rnd):
+        for rank, bcis in fed_spmd.rank_buckets(ranks, cis):
+            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
+            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
+            sl, so = _batched_distill(kfns, base, sl, so, public, glob,
+                                      fed, eval_batch, rnd, bcis)
+            for ci, lt, opt in zip(bcis, fed_spmd.unstack_tree(sl),
+                                   fed_spmd.unstack_tree(so)):
+                lts[ci], opts[ci] = lt, opt
+
+    ex.train_and_logits, ex.distill = train_and_logits, distill
+    return ex
+
+
+def spmd_split_exec(model, base, cfg, fed, targets, clients_data, public,
+                    task, batch_size, eval_batch, ranks):
+    from repro.core.async_agg import make_split_state
+
+    ex = make_split_state(model, base, cfg, fed, targets, clients_data,
+                          task, batch_size)
+    seg_step = jax.jit(fed_spmd.make_split_spmd_segment(model, fed, task,
+                                                        sfns=ex.sfns))
+    base_c, base_s = ex.base_c, ex.base_s
+
+    def train(jobs, rnd):
+        by_ci = dict(jobs)
+        results = {}
+        # fuse contiguous equal-rank runs of the ready-set; the server
+        # carry threads through segments in client visit order
+        for rank, cis in fed_spmd.rank_segments(ranks, list(by_ci)):
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [clients_data[ci] for ci in cis], batch_size,
+                [fed.seed * 983 + rnd])
+            keys = _grid_keys(fed, rnd, cis, valid.shape[1])
+            stacked_c, ex.s_lt, ex.s_opt, _ = seg_step(
+                base_c, base_s, by_ci[cis[0]], ex.s_lt, ex.s_opt, batches,
+                keys, jnp.asarray(valid))
+            shape = tuple(batches["tokens"].shape[-2:])
+            for k, (ci, t) in enumerate(
+                    zip(cis, fed_spmd.unstack_tree(stacked_c))):
+                results[ci] = (t, n_tok[k], int(valid[k].sum()), shape)
+        return [results[ci] for ci, _ in jobs]
+
+    ex.train = train
+    return ex
+
+
+def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
+                           test, task, batch_size, eval_batch, verbose,
+                           ranks):
+    """Heterogeneous Split-FedLLM: contiguous equal-rank client runs
+    become stacked *segment* programs; the shared server half's carry is
+    threaded segment-after-segment, reproducing the sequential backend's
+    exact client visit order.  Only the client-side adapters are
+    heterogeneous — the closing FedAvg harmonizes them across segments
+    (zeropad | svd) back to the global rank."""
+    fns = make_fns(model, fed, task)           # for eval on the full model
+    sfns = split_mod.make_split_fns(model, fed, task)
+    seg_step = jax.jit(fed_spmd.make_split_spmd_segment(model, fed, task,
+                                                        sfns=sfns))
+    key = jax.random.PRNGKey(fed.seed + 3)
+    n_clients = len(clients_data)
+    L = sfns["n_client_groups"]
+    frac_client = L / max(sfns["n_groups"], 1)
+    segments = fed_spmd.rank_segments(ranks)
+
+    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
+                                 fed.lora_alpha)
+    c_global, s_lt = split_mod.split_lora(full_lt, L)
+    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
+    s_opt = sfns["opt_init"](s_lt)
+
+    ledger, history, cost = M.CommLedger(), [], \
+        [M.ClientCost() for _ in range(n_clients)]
+    weights, _ = _client_weights(clients_data)
+    joined = full_lt
+
+    for rnd in range(fed.rounds):
+        batches, valid, n_tok = fed_spmd.stack_client_batches(
+            clients_data, batch_size, [fed.seed * 983 + rnd])
+        key, sub = jax.random.split(key)
+        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
+        up, down = sfns["wire_bytes_per_batch"](batches["tokens"].shape[-2:])
+        lbl = batches["labels"][0, 0].size * 4 if "labels" in batches else 0
+        seg_trees, seg_clients = [], []
+        for rank, cis in segments:
+            lo, hi = cis[0], cis[-1] + 1       # contiguous by construction
+            c_init = lora_lib.maybe_truncate_rank(c_global, rank,
+                                                  fed.lora_rank)
+            c_bytes = M.tree_bytes(c_init)
+            n_c_lora = lora_lib.n_params(c_init)
+            for ci in cis:
+                ledger.record(rnd, ci, "lora_params", M.DOWN, c_bytes)  # cc3
+                for _ in range(int(valid[ci].sum())):
+                    ledger.record(rnd, ci, "activations", M.UP,
+                                  up + lbl)                             # c2
+                    ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
+                cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
+                                   frac_layers=frac_client)
+                ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)    # cc1
+            stacked_c, s_lt, s_opt, _ = seg_step(
+                base_c, base_s, c_init, s_lt, s_opt,
+                {k: v[lo:hi] for k, v in batches.items()},
+                keys[lo:hi], jnp.asarray(valid[lo:hi]))
+            seg_trees.append(fed_spmd.unstack_tree(stacked_c))
+            seg_clients.append(list(cis))
+        # cc2: harmonize the client halves across segments
+        c_global = harmonize_buckets(seg_trees, seg_clients, ranks,
+                                     fed.lora_alpha, fed.lora_rank,
+                                     weights, fed.hetero_agg)
+        joined = split_mod.join_lora(c_global, s_lt)
+        acc, loss = evaluate(fns, base, joined, test, eval_batch)
+        history.append(M.RoundMetrics(
+            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in cost]))))
+        if verbose:
+            print(f"[split/spmd-hetero] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f}")
     return FedResult(history, ledger, joined, [c.flops for c in cost])

@@ -96,7 +96,9 @@ def make_split_fns(model: Model, fed: FedConfig,
     qbits = fed.activation_quant_bits
 
     def _bind(base, lt, rng=None):
-        rank = fed.lora_rank
+        # rank read off the tree: heterogeneous client halves arrive
+        # truncated to the client's own rank and need alpha/r_c scaling
+        rank = lora_lib.tree_rank(lt, fed.lora_rank)
         return lora_lib.bind(base, lt, fed.lora_alpha, rank,
                              dropout_mask_rng=rng, dropout=fed.lora_dropout)
 

@@ -41,65 +41,126 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             step: str = "auto", remat: str = "full",
             scan_layers: bool = True, verbose: bool = True,
             parse_collectives: bool = True,
-            fed_framework: str = "fedllm") -> dict:
+            fed_framework: str = "fedllm", kernel_policy: str = None,
+            client_ranks=None, aggregation: str = "sync") -> dict:
     cfg = get_config(arch)
+    if kernel_policy:
+        # thread ModelConfig.kernel_policy through the lowering path —
+        # launch/steps traces every step under the config's policy scope
+        cfg = dataclasses.replace(cfg, kernel_policy=kernel_policy)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
-           "step": shape.mode if step == "auto" else step}
+           "step": shape.mode if step == "auto" else step,
+           "kernel_policy": cfg.kernel_policy}
     if step == "fed_round":
         rec["fed_framework"] = fed_framework
+        # async reuses the same per-bucket local-update programs — the
+        # arrival schedule is host-side — so the compile artifact is the
+        # sync one; the record keeps the axis visible in sweeps.
+        rec["aggregation"] = aggregation
+        if client_ranks:
+            rec["client_ranks"] = list(client_ranks)
+
+    # Heterogeneous client_ranks compile one stacked program per rank
+    # bucket (core/rounds_spmd.py runs exactly these per-bucket
+    # programs).  Split buckets only contiguous equal-rank runs — the
+    # shared server half is carried client-after-client — so its
+    # program set comes from rank_segments, like the runtime's.
+    builds = [("", {})]
+    if step == "fed_round" and client_ranks:
+        from repro.core import fed_spmd
+        group = fed_spmd.rank_segments if fed_framework == "split" \
+            else fed_spmd.rank_buckets
+        sigs = []                     # distinct (rank, size) signatures —
+        for rank, cis in group(list(client_ranks)):   # jit reuses repeats
+            if (rank, len(cis)) not in sigs:
+                sigs.append((rank, len(cis)))
+        builds = [(f"rank{rank}x{n}", {"n_clients": n, "lora_rank": rank})
+                  for rank, n in sigs]
+
     if step == "auto" and not shape_supported(cfg, shape):
         rec["status"] = "SKIP"
         rec["reason"] = skip_reason(cfg, shape)
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    rec["status"] = "OK"
+    programs = []
     with activate_mesh(mesh):
-        common.enable_shard_hints(True)
-        try:
-            if step == "fed_round":
-                fn, args, shardings = steps_mod.build_fed_round_step(
-                    cfg, shape, mesh, remat=remat,
-                    framework=fed_framework)
-            else:
-                fn, args, shardings = steps_mod.build_step(
-                    cfg, shape, mesh, scan_layers=scan_layers, remat=remat)
-            jitted = jax.jit(fn, in_shardings=shardings)
-            lowered = jitted.lower(*args)
-            t_low = time.time() - t0
-            compiled = lowered.compile()
-            t_comp = time.time() - t0 - t_low
-        finally:
-            common.enable_shard_hints(False)
-
-        ma = compiled.memory_analysis()
-        ca = cost_analysis_dict(compiled)
-        rec.update({
-            "status": "OK",
-            "lower_s": round(t_low, 2),
-            "compile_s": round(t_comp, 2),
-            "arg_gib_per_dev": round(ma.argument_size_in_bytes / GiB, 3),
-            "temp_gib_per_dev": round(ma.temp_size_in_bytes / GiB, 3),
-            "out_gib_per_dev": round(ma.output_size_in_bytes / GiB, 3),
-            "hlo_flops": ca.get("flops", 0.0),
-            "hlo_bytes": ca.get("bytes accessed", 0.0),
-        })
-        if parse_collectives:
+        for label, build_kw in builds:
+            common.enable_shard_hints(True)
             try:
-                text = compiled.as_text()
-                cb = coll_mod.collective_bytes(text)
-                rec["collective_bytes"] = cb
-                rec["collective_total"] = sum(cb.values())
-            except Exception as e:                     # pragma: no cover
-                rec["collective_error"] = str(e)
+                t0 = time.time()
+                if step == "fed_round":
+                    fn, args, shardings = steps_mod.build_fed_round_step(
+                        cfg, shape, mesh, remat=remat,
+                        framework=fed_framework, **build_kw)
+                else:
+                    fn, args, shardings = steps_mod.build_step(
+                        cfg, shape, mesh, scan_layers=scan_layers,
+                        remat=remat)
+                jitted = jax.jit(fn, in_shardings=shardings)
+                lowered = jitted.lower(*args)
+                t_low = time.time() - t0
+                compiled = lowered.compile()
+                t_comp = time.time() - t0 - t_low
+            finally:
+                common.enable_shard_hints(False)
+
+            ma = compiled.memory_analysis()
+            ca = cost_analysis_dict(compiled)
+            prog = {
+                "lower_s": round(t_low, 2),
+                "compile_s": round(t_comp, 2),
+                "arg_gib_per_dev": round(ma.argument_size_in_bytes / GiB, 3),
+                "temp_gib_per_dev": round(ma.temp_size_in_bytes / GiB, 3),
+                "out_gib_per_dev": round(ma.output_size_in_bytes / GiB, 3),
+                "hlo_flops": ca.get("flops", 0.0),
+                "hlo_bytes": ca.get("bytes accessed", 0.0),
+            }
+            if parse_collectives:
+                try:
+                    cb = coll_mod.collective_bytes(compiled.as_text())
+                    prog["collective_bytes"] = cb
+                    prog["collective_total"] = sum(cb.values())
+                except Exception as e:                 # pragma: no cover
+                    prog["collective_error"] = str(e)
+            if label:
+                prog["bucket"] = label
+            programs.append(prog)
+
+    if len(programs) == 1:
+        # the common single-program case keeps the original flat schema
+        # (incl. the per-kind collective_bytes dict / collective_error)
+        rec.update(programs[0])
+    else:
+        # roll per-bucket programs up into the flat record the sweep
+        # tooling reads: summed time/flops, peak per-device memory
+        for k in ("lower_s", "compile_s", "hlo_flops", "hlo_bytes"):
+            rec[k] = round(sum(p[k] for p in programs), 2)
+        for k in ("arg_gib_per_dev", "temp_gib_per_dev", "out_gib_per_dev"):
+            rec[k] = max(p[k] for p in programs)
+        if any("collective_total" in p for p in programs):
+            cb = {}
+            for p in programs:
+                for kind, nbytes in p.get("collective_bytes", {}).items():
+                    cb[kind] = cb.get(kind, 0) + nbytes
+            rec["collective_bytes"] = cb
+            rec["collective_total"] = sum(p.get("collective_total", 0)
+                                          for p in programs)
+        errs = [f"{p.get('bucket', i)}: {p['collective_error']}"
+                for i, p in enumerate(programs) if "collective_error" in p]
+        if errs:                                       # pragma: no cover
+            rec["collective_error"] = "; ".join(errs)
+        rec["bucket_programs"] = programs
     if verbose:
         print(f"[{rec['status']}] {arch} x {shape_name} ({rec['mesh']}, "
               f"{rec['step']}): compile={rec.get('compile_s', '-')}s "
               f"args={rec.get('arg_gib_per_dev', '-')}GiB "
               f"temp={rec.get('temp_gib_per_dev', '-')}GiB "
-              f"coll={rec.get('collective_total', 0)/1e9:.2f}GB")
+              f"coll={rec.get('collective_total', 0)/1e9:.2f}GB"
+              + (f" buckets={len(programs)}" if len(programs) > 1 else ""))
     return rec
 
 
@@ -117,6 +178,19 @@ def main():
     ap.add_argument("--fed-framework", default="fedllm",
                     choices=["fedllm", "kd", "split"],
                     help="which paper framework --step fed_round compiles")
+    ap.add_argument("--kernel-policy", default=None,
+                    choices=["xla", "pallas", "auto"],
+                    help="override ModelConfig.kernel_policy for the "
+                         "lowered step (pallas = fused fwd+bwd kernels)")
+    ap.add_argument("--client-ranks", default=None,
+                    help="comma-separated per-client LoRA ranks for "
+                         "--step fed_round, e.g. 4,8,8,16; compiles one "
+                         "stacked program per rank bucket")
+    ap.add_argument("--aggregation", default="sync",
+                    choices=["sync", "async"],
+                    help="aggregation schedule axis to record; async "
+                         "reuses the per-bucket local-update programs "
+                         "(arrival scheduling is host-side)")
     ap.add_argument("--remat", default="full", choices=["none", "full"])
     ap.add_argument("--no-scan", action="store_true")
     ap.add_argument("--out", default=None, help="write JSON records here")
@@ -132,12 +206,17 @@ def main():
                                            scan_layers=not args.no_scan))
     else:
         assert args.arch and args.shape, "--arch/--shape or --all"
+        ranks = tuple(int(r) for r in args.client_ranks.split(",")) \
+            if args.client_ranks else None
         meshes = (False, True) if args.both_meshes else (args.multi_pod,)
         for mp in meshes:
             records.append(run_one(args.arch, args.shape, mp,
                                    step=args.step, remat=args.remat,
                                    scan_layers=not args.no_scan,
-                                   fed_framework=args.fed_framework))
+                                   fed_framework=args.fed_framework,
+                                   kernel_policy=args.kernel_policy,
+                                   client_ranks=ranks,
+                                   aggregation=args.aggregation))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

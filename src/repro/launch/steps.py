@@ -31,6 +31,22 @@ def _named(policy, spec_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _policy_scoped(fn, cfg: ModelConfig):
+    """Trace ``fn`` under the config's kernel policy: the dry-run/launch
+    lowering path dispatches the LoRA/attention/KD-loss hot paths to the
+    Pallas kernels exactly like the round engine does, so
+    ``--kernel-policy pallas`` reaches the jitted step (ROADMAP leftover
+    from the KernelPolicy PR)."""
+    from repro.kernels import ops as kernel_ops
+
+    @functools.wraps(fn)
+    def scoped(*args, **kwargs):
+        with kernel_ops.policy_scope(cfg.kernel_policy):
+            return fn(*args, **kwargs)
+
+    return scoped
+
+
 def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                      remat: str = "full", scan_layers: bool = True,
                      lora_rank: int = LORA_RANK, peft: bool = True):
@@ -68,7 +84,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
     args = (params_shape, lt_shape, opt_shape, batch_shape)
     shardings = (param_sh, lt_sh, opt_sh, batch_sh)
-    return train_step, args, shardings
+    return _policy_scoped(train_step, cfg), args, shardings
 
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
@@ -85,7 +101,8 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
         logits, _ = model.forward(params, batch, scan_layers=scan_layers)
         return logits[:, -1, :]
 
-    return prefill_step, (params_shape, batch_shape), (param_sh, batch_sh)
+    return _policy_scoped(prefill_step, cfg), (params_shape, batch_shape), \
+        (param_sh, batch_sh)
 
 
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
@@ -108,7 +125,7 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
     args = (params_shape, cache_shape, io["token"], io["pos"])
     shardings = (param_sh, cache_sh, tok_sh, pos_sh)
-    return serve_step, args, shardings
+    return _policy_scoped(serve_step, cfg), args, shardings
 
 
 def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
@@ -187,7 +204,7 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                 keys_shape, valid_shape, weights_shape)
         shardings = (param_sh, slt_sh, sopt_sh, _batch_sh(batch_shape),
                      keys_sh, valid_sh, weights_sh)
-        return round_step, args, shardings
+        return _policy_scoped(round_step, cfg), args, shardings
     if framework == "kd":
         return _build_kd_round(ctx)
     if framework == "split":
@@ -253,7 +270,7 @@ def _build_kd_round(ctx):
     shardings = (ctx.param_sh, ctx.slt_sh, ctx.sopt_sh, lt_sh, opt_sh,
                  ctx.batch_sh(batch_shape), ctx.keys_sh, ctx.valid_sh,
                  ctx.weights_sh, pub_sh, ckeys_sh, skey_sh)
-    return kd_round_core, args, shardings
+    return _policy_scoped(kd_round_core, ctx.cfg), args, shardings
 
 
 def _build_split_round(ctx):
@@ -291,7 +308,7 @@ def _build_split_round(ctx):
             ctx.weights_shape)
     shardings = (base_c_sh, base_s_sh, c_sh, s_sh, s_opt_sh, batch_sh,
                  keys_sh, valid_sh, weights_sh)
-    return round_step, args, shardings
+    return _policy_scoped(round_step, ctx.cfg), args, shardings
 
 
 BUILDERS = {

@@ -158,6 +158,16 @@ def merge(base_params, lora_tree, alpha: float, rank: int):
     return combine(base_params, lora_tree)
 
 
+def tree_rank(lora_tree, default: int) -> int:
+    """Infer a LoRA tree's rank from its leading ``a`` factor's last dim
+    — binding reads the rank off the tree itself, so truncated /
+    heterogeneous-rank trees always get the matching alpha/r scale."""
+    for leaf in jax.tree.leaves(lora_tree):
+        if leaf.ndim >= 2:
+            return leaf.shape[-1] if leaf.shape[-1] != 0 else default
+    return default
+
+
 def n_params(lora_tree) -> int:
     return sum(x.size for x in jax.tree.leaves(lora_tree))
 
@@ -197,6 +207,33 @@ def pad_rank(lora_tree, target_rank: int, rescale: bool = True):
         return l
 
     return rec(lora_tree)
+
+
+def truncate_rank(lora_tree, rank: int, orig_rank: int):
+    """Keep the first ``rank`` components, rescaling for bind's alpha/r:
+    the client binds with alpha/rank, the global delta was alpha/orig, so
+    B shrinks by rank/orig to keep the effective delta scale."""
+    gain = rank / max(orig_rank, 1)
+
+    def rec(l):
+        if isinstance(l, dict) and set(l) == {"a", "b"}:
+            return {"a": l["a"][..., :rank],
+                    "b": l["b"][..., :rank, :] * gain}
+        if isinstance(l, dict):
+            return {k: rec(v) for k, v in l.items()}
+        if isinstance(l, (tuple, list)):
+            return tuple(rec(v) if v is not None else None for v in l)
+        return l
+
+    return rec(lora_tree)
+
+
+def maybe_truncate_rank(lora_tree, rank: int, orig_rank: int):
+    """The a1/cc3 distribution rule: weak clients get a truncated copy
+    of the global tree, full-rank clients the tree itself."""
+    if rank == orig_rank:
+        return lora_tree
+    return truncate_rank(lora_tree, rank, orig_rank)
 
 
 def svd_truncate(delta: jax.Array, rank: int):
