@@ -1,10 +1,18 @@
 """Paper Fig. 4 reproduction: per-client per-round communication bytes
 (log scale in the paper) and computation FLOPs for the three frameworks,
-measured by the framework's own ledger/accounting."""
+measured by the framework's own ledger/accounting — plus the privacy
+overhead column: what DP-SGD + simulated secure aggregation add to each
+framework's wire bill (secagg key/recovery exchange + DP metadata)."""
 from __future__ import annotations
 
+import dataclasses
+
 from benchmarks import common
+from repro.configs.base import PrivacyConfig
 from repro.core.rounds import run_federated
+
+PRIVACY = PrivacyConfig(dp_clip=1.0, dp_noise_multiplier=0.5,
+                        secure_agg=True)
 
 
 def run():
@@ -20,6 +28,15 @@ def run():
         common.emit(f"fig4_{fw}_comm_bytes_per_client_round", 0.0,
                     f"{comm:.3e}")
         common.emit(f"fig4_{fw}_client_flops_per_round", 0.0, f"{flops:.3e}")
+        # privacy-overhead column: same round under DP + secure-agg
+        pres = run_federated(cfg, dataclasses.replace(fed, privacy=PRIVACY),
+                             pub, clients, te, batch_size=16, eval_batch=64)
+        n_cr = fed.rounds * fed.n_clients
+        overhead = pres.ledger.privacy_overhead_bytes() / n_cr
+        common.emit(f"fig4_{fw}_privacy_overhead_bytes_per_client_round",
+                    0.0, f"{overhead:.3e}")
+        common.emit(f"fig4_{fw}_privacy_epsilon", 0.0,
+                    f"{pres.history[-1].epsilon:.3f}")
 
     # paper claims (SSIII / Fig 4)
     ok_comm = out["split"][0] > max(out["fedllm"][0], out["kd"][0])

@@ -119,6 +119,18 @@ def run():
     record("kernel_rwkv6_scan_8x256x64", us,
            f"{2*BH2*S2*D2*D2*2/us*1e-3:.1f}GFLOP/s")
 
+    # ---------------- DP clip-scale-accumulate (fwd-only kernel) --------- #
+    Bdp, Pdp = 16, 16_384
+    gdp = jax.random.normal(ks[7], (Bdp, Pdp)) * 2.0
+    if ON_TPU:
+        from repro.kernels.dp_clip import dp_clip_mean_rows
+        fdp = lambda t_: dp_clip_mean_rows(t_, clip=1.0, interpret=False)
+    else:
+        fdp = lambda t_: ref.clip_mean_rows_ref(t_, 1.0)
+    us = _time(jax.jit(fdp), gdp)
+    record("kernel_dp_clip_16x16384_c1", us,
+           f"{Bdp*Pdp*4*2/us*1e-3:.1f}GB/s_stream")
+
     # ---------------- quantize + fused top-k ----------------------------- #
     x2 = jax.random.normal(ks[6], (1024, 2048))
     us = _time(jax.jit(lambda t_: ref.quantize_rows_ref(t_, 8)), x2)

@@ -213,6 +213,51 @@ class ShapeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrivacyConfig:
+    """Privacy mechanisms for the federated wire (src/repro/privacy/).
+
+    DP-SGD (``dp_clip`` / ``dp_noise_multiplier``): per-example gradient
+    clipping inside every local fine-tune step (FedLLM a2, KD b1) plus
+    seeded Gaussian noise on the uploaded payload — LoRA params for
+    FedLLM, public-set logits for KD (clipped per row, composing with
+    the top-k/int-quant compression), and the smashed boundary
+    activations for Split (clipped per token row, noised per transfer).
+    Noise keys are per-(client, round[, step]) ``fold_in`` streams, so
+    both execution backends draw bit-identical noise.  An RDP accountant
+    (privacy/accountant.py) reports (ε, δ) per round in RoundMetrics.
+
+    Simulated secure aggregation (``secure_agg``): seeded pairwise
+    additive masks over fixed-point payloads that cancel *exactly* in
+    the server sum (privacy/secure_agg.py verifies the cancellation in
+    uint64 arithmetic every aggregation event); key/mask-exchange and
+    dropout-recovery bytes are recorded in the CommLedger so Fig. 4
+    wire accounting includes the cost of privacy."""
+
+    dp_clip: float = 0.0             # C: per-example L2 clip (0 = DP off)
+    dp_noise_multiplier: float = 0.0  # sigma: noise stddev / dp_clip
+    dp_delta: float = 1e-5           # delta of the reported (eps, delta)
+    secure_agg: bool = False         # pairwise-masked aggregation overlay
+    secure_agg_frac_bits: int = 24   # fixed-point fraction bits for masks
+    seed: int = 0                    # privacy noise stream (folded in
+    #                                  alongside FedConfig.seed — see
+    #                                  privacy/dp._run_key; independent
+    #                                  of the dropout/batching streams)
+
+    @property
+    def dp_enabled(self) -> bool:
+        return self.dp_clip > 0.0
+
+    @property
+    def noise_std(self) -> float:
+        """Gaussian stddev of the payload noise (sigma * C)."""
+        return self.dp_noise_multiplier * self.dp_clip
+
+    @property
+    def enabled(self) -> bool:
+        return self.dp_enabled or self.secure_agg
+
+
+@dataclasses.dataclass(frozen=True)
 class FedConfig:
     """Federated fine-tuning round configuration (paper SS II/V)."""
     framework: str = "fedllm"        # fedllm | kd | split
@@ -254,6 +299,9 @@ class FedConfig:
     staleness_decay: float = 0.5     # weight = (1 + staleness)^-decay
     max_staleness: int = 4           # drop updates staler than this;
     #                                  0 = force synchronous participation
+    # privacy subsystem (src/repro/privacy/): client-side DP-SGD and
+    # simulated secure aggregation, uniform over frameworks/backends
+    privacy: PrivacyConfig = dataclasses.field(default_factory=PrivacyConfig)
     # optimization
     lr: float = 1e-3
     optimizer: str = "adam"

@@ -52,6 +52,8 @@ from repro.core.fedavg import evaluate, fedavg, make_fns
 from repro.core.heterogeneous import aggregate_hetero
 from repro.data.loader import epoch_batches
 from repro.peft import lora as lora_lib
+from repro.privacy import dp as dp_mod
+from repro.privacy.secure_agg import SecureAggSession
 
 
 # --------------------------------------------------------------------------- #
@@ -171,7 +173,8 @@ def _local_rng(fed, rnd: int, ci: int):
 # --------------------------------------------------------------------------- #
 def _drive_fedllm(ex, base, cfg, fed, clients_data, test, eval_batch,
                   verbose, ranks):
-    from repro.core.rounds import FedResult
+    from repro.core.rounds import (FedResult, make_accountant,
+                                   round_epsilon)
 
     n_clients = len(clients_data)
     key = jax.random.PRNGKey(fed.seed + 1)
@@ -184,10 +187,17 @@ def _drive_fedllm(ex, base, cfg, fed, clients_data, test, eval_batch,
     data_w = [len(d["tokens"]) for d in clients_data]
     total_w = float(sum(data_w))
     in_flight: Dict[int, _Job] = {}
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
+    releases = [0] * n_clients      # noisy uploads per client (epsilon)
 
     for rnd in range(fed.rounds):
-        # every free client pulls the current global and starts a job
+        # every free client pulls the current global and starts a job;
+        # this round's starters form one secure-agg masking cohort (the
+        # payloads are created — and masked — now, even though they may
+        # deliver rounds later)
         starters = [ci for ci in range(n_clients) if ci not in in_flight]
+        secagg.begin_cohort(ledger, rnd, starters)
         jobs = []
         for ci in starters:
             lt = lora_lib.maybe_truncate_rank(global_lt, ranks[ci],
@@ -196,23 +206,37 @@ def _drive_fedllm(ex, base, cfg, fed, clients_data, test, eval_batch,
             jobs.append((ci, lt))
         for (ci, _), (new_lt, n_tok) in zip(jobs, ex.train(jobs, rnd)):
             cost[ci].add_train(cfg, n_tok, lora_lib.n_params(new_lt))
+            new_lt = dp_mod.privatize_tree(
+                new_lt, dp_mod.noise_key(fed, rnd, ci), priv.noise_std)
+            secagg.collect(rnd, ci, new_lt)
+            releases[ci] += 1
             in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci),
                                  new_lt)
-        # fold in this round's arrivals, staleness-weighted
-        arrivals = []
+        # fold in this round's arrivals, staleness-weighted; too-stale
+        # masked uploads are dropped (their pairwise masks recovered
+        # like any other absent cohort member's)
+        arrivals, delivered = [], []
         for j in _pop_arrivals(in_flight, rnd):
             ledger.record(rnd, j.client, "lora_params", M.UP,
                           M.tree_bytes(j.payload))
+            if priv.dp_enabled:
+                ledger.record(rnd, j.client, "dp_meta", M.UP,
+                              M.DP_META_BYTES)
             s = rnd - j.start
             if s <= fed.max_staleness:
                 arrivals.append((j.client, j.payload, s, data_w[j.client]))
+                delivered.append((j.start, j.client))
+            else:
+                secagg.discard(j.start, j.client)
+        secagg.deliver(ledger, rnd, delivered)
         if arrivals:
             global_lt = stale_weighted_avg(global_lt, arrivals, total_w,
                                            fed, ranks)
         acc, loss = evaluate(ex.fns, base, global_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, max(releases))))
         if verbose:
             print(f"[fedllm/async] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f} arrived={len(arrivals)}")
@@ -247,7 +271,8 @@ def _seq_fedllm_exec(model, base, cfg, fed, targets, clients_data, public,
 # --------------------------------------------------------------------------- #
 def _drive_kd(ex, base, cfg, fed, clients_data, test, eval_batch, verbose,
               ranks):
-    from repro.core.rounds import FedResult
+    from repro.core.rounds import (FedResult, make_accountant,
+                                   round_epsilon)
 
     n_clients = len(clients_data)
     sched = ParticipationSchedule(n_clients, fed.seed + 17,
@@ -258,27 +283,44 @@ def _drive_kd(ex, base, cfg, fed, clients_data, test, eval_batch, verbose,
     pub_tok = ex.public["tokens"].size
     in_flight: Dict[int, _Job] = {}
     glob = None                        # latest global knowledge (b6)
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
+    releases = [0] * n_clients
 
     for rnd in range(fed.rounds):
-        # free clients start a job: b1 local FT + b2/b3 knowledge
+        # free clients start a job: b1 local FT + b2/b3 knowledge (the
+        # starters are the round's secure-agg masking cohort; the b3
+        # logits are row-clipped + noised before compression)
         starters = [ci for ci in range(n_clients) if ci not in in_flight]
+        secagg.begin_cohort(ledger, rnd, starters)
         for ci, (logits, n_tok) in zip(starters,
                                        ex.train_and_logits(starters, rnd)):
+            logits = dp_mod.privatize_logits(
+                logits, dp_mod.noise_key(fed, rnd, ci), fed)
             lg, wire = kd_mod.compress_for_wire(logits, fed)
+            secagg.collect(rnd, ci, lg)
+            releases[ci] += 1
             cost[ci].add_train(cfg, n_tok, ex.n_lora[ci])
             cost[ci].add_fwd(cfg, pub_tok)
             in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci),
                                  (lg, wire))
         # arrivals: b4 staleness-weighted knowledge processing
         arrived = _pop_arrivals(in_flight, rnd)
-        kept, ws = [], []
+        kept, ws, delivered = [], [], []
         for j in arrived:
             ledger.record(rnd, j.client, "logits", M.UP, j.payload[1])
+            if priv.dp_enabled:
+                ledger.record(rnd, j.client, "dp_meta", M.UP,
+                              M.DP_META_BYTES)
             s = rnd - j.start
             if s <= fed.max_staleness:
                 kept.append(j.payload[0])
                 ws.append(data_w[j.client]
                           * staleness_weight(s, fed.staleness_decay))
+                delivered.append((j.start, j.client))
+            else:
+                secagg.discard(j.start, j.client)
+        secagg.deliver(ledger, rnd, delivered)
         if kept:
             teacher = kd_mod.aggregate_knowledge(kept, ws)
             # b5: distill the (possibly stale) knowledge into the server
@@ -299,7 +341,8 @@ def _drive_kd(ex, base, cfg, fed, clients_data, test, eval_batch, verbose,
         acc, loss = evaluate(ex.fns, base, ex.server_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, max(releases))))
         if verbose:
             print(f"[kd/async] round {rnd}: acc={acc:.4f} loss={loss:.4f} "
                   f"arrived={len(arrived)}")
@@ -385,7 +428,8 @@ def _seq_kd_exec(model, base, cfg, fed, targets, clients_data, public,
 # --------------------------------------------------------------------------- #
 def _drive_split(ex, base, cfg, fed, clients_data, test, eval_batch,
                  verbose, ranks):
-    from repro.core.rounds import FedResult
+    from repro.core.rounds import (FedResult, make_accountant,
+                                   round_epsilon)
 
     n_clients = len(clients_data)
     sched = ParticipationSchedule(n_clients, fed.seed + 17,
@@ -396,12 +440,18 @@ def _drive_split(ex, base, cfg, fed, clients_data, test, eval_batch,
     total_w = float(sum(data_w))
     in_flight: Dict[int, _Job] = {}
     c_global = ex.c_global
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
+    releases = [0] * n_clients      # per-client c2 noise events
 
     for rnd in range(fed.rounds):
         # free clients run a split-training job NOW (the server half is
-        # in the activation loop, so it updates synchronously); only the
-        # cc1 client-half adapter upload goes in flight
+        # in the activation loop, so it updates synchronously — every
+        # boundary activation is clipped + noised inside the step); only
+        # the cc1 client-half adapter upload goes in flight, masked
+        # against this round's starter cohort
         starters = [ci for ci in range(n_clients) if ci not in in_flight]
+        secagg.begin_cohort(ledger, rnd, starters)
         jobs = []
         for ci in starters:
             c_init = lora_lib.maybe_truncate_rank(c_global, ranks[ci],
@@ -418,17 +468,26 @@ def _drive_split(ex, base, cfg, fed, clients_data, test, eval_batch,
                     ledger.record(rnd, ci, "activations", M.UP,
                                   up + lbl)                            # c2
                     ledger.record(rnd, ci, "act_grads", M.DOWN, down)  # c4
+                    if priv.dp_enabled:
+                        ledger.record(rnd, ci, "dp_meta", M.UP,
+                                      M.DP_META_BYTES)
+            releases[ci] += n_steps
             cost[ci].add_train(cfg, n_tok, lora_lib.n_params(c_lt),
                                frac_layers=ex.frac_client)
+            secagg.collect(rnd, ci, c_lt)
             in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci), c_lt)
         # arrivals: staleness-weighted FedAvg of the client halves (cc2)
-        arrivals = []
+        arrivals, delivered = [], []
         for j in _pop_arrivals(in_flight, rnd):
             ledger.record(rnd, j.client, "lora_params", M.UP,
                           M.tree_bytes(j.payload))                   # cc1
             s = rnd - j.start
             if s <= fed.max_staleness:
                 arrivals.append((j.client, j.payload, s, data_w[j.client]))
+                delivered.append((j.start, j.client))
+            else:
+                secagg.discard(j.start, j.client)
+        secagg.deliver(ledger, rnd, delivered)
         if arrivals:
             c_global = stale_weighted_avg(c_global, arrivals, total_w,
                                           fed, ranks)
@@ -436,7 +495,8 @@ def _drive_split(ex, base, cfg, fed, clients_data, test, eval_batch,
         acc, loss = evaluate(ex.fns, base, joined, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, max(releases))))
         if verbose:
             print(f"[split/async] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f} arrived={len(arrivals)}")
@@ -459,9 +519,11 @@ def _seq_split_exec(model, base, cfg, fed, targets, clients_data, public,
                                        seed=fed.seed * 983 + rnd):
                 rng, sub = jax.random.split(rng)
                 jb = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                nkey = dp_mod.noise_key(fed, rnd, ci, n_steps) \
+                    if fed.privacy.dp_enabled else None
                 c_lt, ex.s_lt, c_opt, ex.s_opt, _ = \
                     sfns["split_train_step"](base_c, base_s, c_lt, ex.s_lt,
-                                             c_opt, ex.s_opt, jb, sub)
+                                             c_opt, ex.s_opt, jb, sub, nkey)
                 n_tok += batch["tokens"].size
                 n_steps += 1
                 shape = batch["tokens"].shape

@@ -214,24 +214,39 @@ def make_bucket_update(model: Model, fed: FedConfig,
 def make_spmd_round(model: Model, fed: FedConfig,
                     task: str = "classification"):
     """Returns round_step(base, stacked_lt, stacked_opt, batches, keys,
-    valid, weights) where stacked_* have a leading client axis C and
-    ``batches`` leaves are (C, n_steps, B, ...).  Output LoRA is already
-    aggregated and redistributed (identical across the client axis, like
-    a1 of the next round)."""
+    valid, weights[, noise_keys]) where stacked_* have a leading client
+    axis C and ``batches`` leaves are (C, n_steps, B, ...).  Output LoRA
+    is already aggregated and redistributed (identical across the client
+    axis, like a1 of the next round); the pre-aggregation *uploaded*
+    trees come back too, so the host can run the secure-agg masking
+    overlay and the per-client wire accounting on exactly what crossed
+    the wire.
+
+    With ``PrivacyConfig`` noise active the extra ``noise_keys`` input
+    is one key per client slot (privacy/dp.noise_key — the same keys
+    the sequential backend folds in), and the DP payload noise is added
+    to every client's tree *before* the client-axis FedAvg, mirroring
+    the a3 upload boundary."""
     local_update = make_local_update(model, fed, task)
+    noise_std = fed.privacy.noise_std
 
     def round_step(base, stacked_lt, stacked_opt, batches, keys, valid,
-                   weights):
+                   weights, noise_keys=None):
         new_lt, new_opt, losses = jax.vmap(
             local_update, in_axes=(None, 0, 0, 0, 0, 0))(
                 base, stacked_lt, stacked_opt, batches, keys, valid)
+        if noise_std > 0.0:
+            from repro.privacy import dp as dp_mod
+            new_lt = jax.vmap(
+                lambda t, k: dp_mod.privatize_tree(t, k, noise_std))(
+                    new_lt, noise_keys)
         # a4: weighted FedAvg == client-axis reduction -> all-reduce
         avg = weighted_client_mean(new_lt, weights)
         # a1 of the next round: broadcast back to every client slot
         C = jax.tree.leaves(stacked_lt)[0].shape[0]
         redist = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), avg)
-        return redist, new_opt, losses
+        return redist, new_opt, losses, new_lt
 
     return round_step
 
@@ -283,7 +298,13 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
     not an execution backend).
 
     Returns round_step(base_c, base_s, c_global, s_lt, s_opt, batches,
-    keys, valid, weights) -> (new_c_global, s_lt, s_opt, losses).
+    keys, valid, weights[, nkeys]) -> (new_c_global, s_lt, s_opt,
+    losses, stacked_c).  ``stacked_c`` is the per-client uploaded
+    half (for the host's secure-agg overlay); ``nkeys`` is the
+    (C, S)-stacked privacy noise-key grid consumed by the c2 activation
+    mechanism when DP noise is active — the same per-(client, step)
+    fold_in stream the sequential backend passes, so noise is
+    bit-identical across backends.
     """
     from repro.core import split as split_mod
 
@@ -291,33 +312,34 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
         sfns = split_mod.make_split_fns(model, fed, task)
     step = sfns["split_step"]
     opt_init = sfns["opt_init"]
+    noised = fed.privacy.noise_std > 0.0
 
     def round_step(base_c, base_s, c_global, s_lt, s_opt, batches, keys,
-                   valid, weights):
+                   valid, weights, nkeys=None):
         def per_client(carry, client):
             s_lt, s_opt = carry
-            client_batches, client_keys, client_valid = client
 
             def body(inner, x):
                 c_lt, c_opt, s_lt, s_opt = inner
-                batch, key, ok = x
+                batch, key, ok = x[:3]
+                nk = x[3] if noised else None
                 nc, ns, nco, nso, loss = step(base_c, base_s, c_lt, s_lt,
-                                              c_opt, s_opt, batch, key)
+                                              c_opt, s_opt, batch, key, nk)
                 return (_select(ok, nc, c_lt), _select(ok, nco, c_opt),
                         _select(ok, ns, s_lt), _select(ok, nso, s_opt)), \
                     jnp.where(ok, loss, 0.0)
 
             # cc3: fresh client copy of the global client-side LoRA
             (c_lt, _, s_lt, s_opt), losses = jax.lax.scan(
-                body, (c_global, opt_init(c_global), s_lt, s_opt),
-                (client_batches, client_keys, client_valid))
+                body, (c_global, opt_init(c_global), s_lt, s_opt), client)
             return (s_lt, s_opt), (c_lt, losses)
 
+        xs = (batches, keys, valid) + ((nkeys,) if noised else ())
         (s_lt, s_opt), (stacked_c, losses) = jax.lax.scan(
-            per_client, (s_lt, s_opt), (batches, keys, valid))
+            per_client, (s_lt, s_opt), xs)
         # cc2: FedAvg of the client halves — client-axis reduction
         new_c_global = weighted_client_mean(stacked_c, weights)
-        return new_c_global, s_lt, s_opt, losses
+        return new_c_global, s_lt, s_opt, losses, stacked_c
 
     return round_step
 
@@ -335,7 +357,9 @@ def make_split_spmd_segment(model: Model, fed: FedConfig,
     reproduces the sequential backend's exact client visit order.
 
     Returns seg_step(base_c, base_s, c_init, s_lt, s_opt, batches, keys,
-    valid) -> (stacked_c, s_lt, s_opt, losses).
+    valid[, nkeys]) -> (stacked_c, s_lt, s_opt, losses).  ``nkeys`` as
+    in ``make_split_spmd_round``: the (|seg|, S) privacy noise-key grid
+    for the c2 activation mechanism when DP noise is active.
     """
     from repro.core import split as split_mod
 
@@ -343,29 +367,30 @@ def make_split_spmd_segment(model: Model, fed: FedConfig,
         sfns = split_mod.make_split_fns(model, fed, task)
     step = sfns["split_step"]
     opt_init = sfns["opt_init"]
+    noised = fed.privacy.noise_std > 0.0
 
     def seg_step(base_c, base_s, c_init, s_lt, s_opt, batches, keys,
-                 valid):
+                 valid, nkeys=None):
         def per_client(carry, client):
             s_lt, s_opt = carry
-            client_batches, client_keys, client_valid = client
 
             def body(inner, x):
                 c_lt, c_opt, s_lt, s_opt = inner
-                batch, key, ok = x
+                batch, key, ok = x[:3]
+                nk = x[3] if noised else None
                 nc, ns, nco, nso, loss = step(base_c, base_s, c_lt, s_lt,
-                                              c_opt, s_opt, batch, key)
+                                              c_opt, s_opt, batch, key, nk)
                 return (_select(ok, nc, c_lt), _select(ok, nco, c_opt),
                         _select(ok, ns, s_lt), _select(ok, nso, s_opt)), \
                     jnp.where(ok, loss, 0.0)
 
             (c_lt, _, s_lt, s_opt), losses = jax.lax.scan(
-                body, (c_init, opt_init(c_init), s_lt, s_opt),
-                (client_batches, client_keys, client_valid))
+                body, (c_init, opt_init(c_init), s_lt, s_opt), client)
             return (s_lt, s_opt), (c_lt, losses)
 
+        xs = (batches, keys, valid) + ((nkeys,) if noised else ())
         (s_lt, s_opt), (stacked_c, losses) = jax.lax.scan(
-            per_client, (s_lt, s_opt), (batches, keys, valid))
+            per_client, (s_lt, s_opt), xs)
         return stacked_c, s_lt, s_opt, losses
 
     return seg_step

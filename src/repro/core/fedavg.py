@@ -52,16 +52,41 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         return lora_lib.bind(base, lt, fed.lora_alpha, rank,
                              dropout_mask_rng=rng, dropout=fed.lora_dropout)
 
+    priv = fed.privacy
+
     def train_step_impl(base, lt, opt_state, batch, rng):
         """Raw (un-jitted) local step — also scanned/vmapped by the SPMD
-        backend (core/fed_spmd.py), so both backends share ONE loss."""
+        backend (core/fed_spmd.py), so both backends share ONE loss.
+
+        With ``PrivacyConfig.dp_clip > 0`` this is a DP-SGD step: the
+        stacked per-example gradients are clipped to L2 norm C and
+        averaged through the fused clip-scale-accumulate kernel
+        (privacy/dp.clipped_grad_mean) before the optimizer update —
+        deterministic, so the backends stay in parity for free.  The
+        seeded payload noise lives at the upload boundary, not here."""
         def loss_fn(l):
             bound = _bind(base, l, rng)
             logits, aux = model.forward(bound, batch)
             loss, _ = task_loss(logits, batch)
             return loss + aux
 
-        loss, grads = jax.value_and_grad(loss_fn)(lt)
+        if priv.dp_clip > 0.0:
+            from repro.privacy import dp as dp_mod
+
+            def example_loss(l, example):
+                one = jax.tree.map(lambda x: x[None], example)
+                bound = _bind(base, l, rng)
+                logits, aux = model.forward(bound, one)
+                loss, _ = task_loss(logits, one)
+                return loss + aux
+
+            losses, per_ex = jax.vmap(
+                jax.value_and_grad(example_loss),
+                in_axes=(None, 0))(lt, batch)
+            grads = dp_mod.clipped_grad_mean(per_ex, priv.dp_clip)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(lt)
         new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
         return new_lt, new_opt, loss
 

@@ -19,6 +19,13 @@ from repro.configs.base import FedConfig, ModelConfig
 UP = "up"          # client -> server
 DOWN = "down"      # server -> client
 
+# Ledger event names that are privacy *overhead* rather than model
+# payload: secure-agg key/share exchange, dropout-recovery shares, and
+# per-release DP metadata (clip bound, noise scale, seed id).  Fig. 4's
+# privacy-overhead column and the bit-exactness tests filter on these.
+PRIVACY_NAMES = ("secagg_keys", "secagg_recovery", "dp_meta")
+DP_META_BYTES = 12   # fp32 clip + fp32 sigma + int32 stream id
+
 
 @dataclasses.dataclass
 class CommEvent:
@@ -82,6 +89,15 @@ class CommLedger:
         pcr = self.per_client_round()
         return sum(pcr.values()) / max(len(pcr), 1)
 
+    def privacy_overhead_bytes(self) -> int:
+        """Total wire bytes spent on the privacy machinery itself."""
+        return sum(e.bytes for e in self.events if e.name in PRIVACY_NAMES)
+
+    def payload_events(self) -> "List[CommEvent]":
+        """Events net of privacy overhead — what the non-private engines
+        would have recorded (the bit-exactness comparison surface)."""
+        return [e for e in self.events if e.name not in PRIVACY_NAMES]
+
 
 def tree_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
@@ -125,6 +141,10 @@ class RoundMetrics:
     loss: float
     comm_bytes_per_client: float
     client_flops: float
+    # DP epsilon spent so far at the configured PrivacyConfig.dp_delta
+    # (privacy/accountant.py).  0.0 = DP not enabled (no accounting, no
+    # claim); inf = clipping active without noise (no guarantee).
+    epsilon: float = 0.0
 
 
 def logit_bytes(n_samples: int, logit_dim: int, topk: int = 0,

@@ -52,6 +52,27 @@ def _to_jax(batch):
     return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
+def make_accountant(fed: FedConfig):
+    """RDP accountant for the run, or None when DP is off entirely.
+
+    A clipping-only run (dp_clip > 0, noise 0) gets an accountant whose
+    epsilon is ``inf`` — the mechanism is active but offers no
+    (eps, delta) guarantee, and reporting 0.0 would claim the strongest
+    one instead."""
+    if not fed.privacy.dp_enabled:
+        return None
+    from repro.privacy.accountant import GaussianAccountant
+    return GaussianAccountant(fed.privacy.dp_noise_multiplier,
+                              fed.privacy.dp_delta)
+
+
+def round_epsilon(acct, releases: int) -> float:
+    """eps at the configured dp_delta after ``releases`` noisy uploads
+    per client; 0.0 when DP is not enabled (no accounting, no claim),
+    inf when clipping runs without noise."""
+    return acct.epsilon(releases) if acct is not None else 0.0
+
+
 def client_lora_ranks(fed: FedConfig, n_clients: int) -> List[int]:
     """Per-client LoRA ranks, validated against the client count."""
     if not fed.client_ranks:
@@ -81,6 +102,11 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     if fed.aggregation not in ("sync", "async"):
         raise ValueError(f"unknown aggregation {fed.aggregation!r} "
                          "(expected 'sync' or 'async')")
+    if fed.privacy.dp_noise_multiplier > 0.0 and fed.privacy.dp_clip <= 0.0:
+        raise ValueError(
+            "privacy.dp_noise_multiplier > 0 requires privacy.dp_clip > 0 "
+            "(the noise stddev is sigma * clip; an unclipped release has "
+            "unbounded sensitivity and no (eps, delta) guarantee)")
     client_lora_ranks(fed, len(clients_data))   # validate early
     model = build_model(cfg)
     key = jax.random.PRNGKey(fed.seed)
@@ -119,11 +145,16 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
 # --------------------------------------------------------------------------- #
 def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
                 batch_size, eval_batch, verbose):
+    from repro.privacy import dp as dp_mod
+    from repro.privacy.secure_agg import SecureAggSession
+
     fns = make_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 1)
     n_clients = len(clients_data)
     ranks = client_lora_ranks(fed, n_clients)
     hetero = len(set(ranks)) > 1
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
 
     global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
                                    fed.lora_alpha)
@@ -132,13 +163,16 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
     n_lora = lora_lib.n_params(global_lt)
 
     for rnd in range(fed.rounds):
+        # the sync masking cohort is every client, every round
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         locals_, weights = [], []
         for ci, data in enumerate(clients_data):
             # a1: distribute global params (truncate rank for weak clients)
             lt = lora_lib.maybe_truncate_rank(global_lt, ranks[ci],
                                               fed.lora_rank)
             ledger.record(rnd, ci, "lora_params", M.DOWN, M.tree_bytes(lt))
-            # a2: local fine-tuning
+            # a2: local fine-tuning (per-example DP-SGD clipping inside
+            # the shared train step when privacy.dp_clip > 0)
             opt = fns["opt_init"](lt)
             n_tok = 0
             for ep in range(fed.local_epochs):
@@ -149,11 +183,18 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
                                                    _to_jax(batch), sub)
                     n_tok += batch["tokens"].size
             cost[ci].add_train(cfg, n_tok, lora_lib.n_params(lt))
-            # a3: upload
+            # a3: upload — seeded Gaussian noise on the payload, then
+            # pairwise secure-agg masks over the (noisy) upload
+            lt = dp_mod.privatize_tree(lt, dp_mod.noise_key(fed, rnd, ci),
+                                       priv.noise_std)
             ledger.record(rnd, ci, "lora_params", M.UP, M.tree_bytes(lt))
+            if priv.dp_enabled:
+                ledger.record(rnd, ci, "dp_meta", M.UP, M.DP_META_BYTES)
+            secagg.collect(rnd, ci, lt)
             locals_.append(lt)
             weights.append(len(data["tokens"]))
-        # a4: aggregate
+        # a4: aggregate (the masked sum cancels exactly — verified)
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
         if hetero:
             global_lt = aggregate_hetero(locals_, ranks, fed.lora_alpha,
                                          fed.lora_rank, weights,
@@ -164,7 +205,8 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
         history.append(M.RoundMetrics(
             rnd, acc, loss,
             ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, rnd + 1)))
         if verbose:
             print(f"[fedllm] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
     return FedResult(history, ledger, global_lt, [c.flops for c in cost])
@@ -175,9 +217,14 @@ def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
 # --------------------------------------------------------------------------- #
 def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
             task, batch_size, eval_batch, verbose):
+    from repro.privacy import dp as dp_mod
+    from repro.privacy.secure_agg import SecureAggSession
+
     fns = make_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 2)
     n_clients = len(clients_data)
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
     # Heterogeneous ranks are KD's native habitat (paper SSIII.A): params
     # never cross the wire, so each client simply trains at its own rank
     # and the exchanged knowledge stays rank-agnostic.
@@ -196,11 +243,13 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
     pub_tok = public["tokens"].size
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         uploaded = []
         weights = []
         for ci, data in enumerate(clients_data):
             lt, opt = client_lts[ci], client_opts[ci]
-            # b1: local fine-tuning (params never leave the client)
+            # b1: local fine-tuning (params never leave the client;
+            # per-example DP-SGD clipping inside the shared train step)
             n_tok = 0
             for ep in range(fed.local_epochs):
                 for batch in epoch_batches(data, batch_size,
@@ -213,13 +262,20 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
             # b2: logits on the public dataset
             logits = kd_mod.client_logits(fns, base, lt, public, eval_batch)
             cost[ci].add_fwd(cfg, pub_tok)
-            # b3: upload (with SSIV.B.2 compression if configured)
+            # b3: upload — row-clipped noisy logits first (the KD threat
+            # surface), composing with the SSIV.B.2 compression
+            logits = dp_mod.privatize_logits(
+                logits, dp_mod.noise_key(fed, rnd, ci), fed)
             logits, wire = kd_mod.compress_for_wire(logits, fed)
             ledger.record(rnd, ci, "logits", M.UP, wire)
+            if priv.dp_enabled:
+                ledger.record(rnd, ci, "dp_meta", M.UP, M.DP_META_BYTES)
+            secagg.collect(rnd, ci, logits)
             uploaded.append(logits)
             weights.append(len(data["tokens"]))
             client_lts[ci], client_opts[ci] = lt, opt
-        # b4: knowledge processing
+        # b4: knowledge processing (masked sum cancels exactly — verified)
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
         teacher = kd_mod.aggregate_knowledge(uploaded, weights)
         # b5: server-side distillation into the global model
         server_lt, server_opt, _ = kd_mod.distill(
@@ -242,7 +298,8 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
         acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, rnd + 1)))
         if verbose:
             print(f"[kd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
     return FedResult(history, ledger, server_lt,
@@ -254,6 +311,9 @@ def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
 # --------------------------------------------------------------------------- #
 def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
                batch_size, eval_batch, verbose):
+    from repro.privacy import dp as dp_mod
+    from repro.privacy.secure_agg import SecureAggSession
+
     fns = make_fns(model, fed, task)           # for eval on the full model
     sfns = split_mod.make_split_fns(model, fed, task)
     key = jax.random.PRNGKey(fed.seed + 3)
@@ -263,6 +323,9 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
     L = sfns["n_client_groups"]
     n_groups = sfns["n_groups"]
     frac_client = L / max(n_groups, 1)
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
+    releases = 0            # per-client c2 noise events (for epsilon)
 
     full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
                                  fed.lora_alpha)
@@ -274,7 +337,9 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
         [M.ClientCost() for _ in range(n_clients)]
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         locals_, weights = [], []
+        max_steps = 0
         for ci, data in enumerate(clients_data):
             # cc3: distribute the global client half (truncated for weak
             # clients — only the *client-side* adapters are heterogeneous;
@@ -284,7 +349,7 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
             ledger.record(rnd, ci, "lora_params", M.DOWN,
                           M.tree_bytes(c_lt))                      # cc3
             c_opt = sfns["opt_init"](c_lt)
-            n_tok = 0
+            n_tok, step = 0, 0
             for batch in epoch_batches(data, batch_size,
                                        seed=fed.seed * 983 + rnd):
                 up, down = sfns["wire_bytes_per_batch"](
@@ -292,17 +357,27 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
                 ledger.record(rnd, ci, "activations", M.UP,
                               up + batch["labels"].size * 4)        # c2
                 ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
+                if priv.dp_enabled:
+                    ledger.record(rnd, ci, "dp_meta", M.UP,
+                                  M.DP_META_BYTES)
                 key, sub = jax.random.split(key)
+                nkey = dp_mod.noise_key(fed, rnd, ci, step) \
+                    if priv.dp_enabled else None
                 c_lt, s_lt, c_opt, s_opt, _ = sfns["split_train_step"](
                     base_c, base_s, c_lt, s_lt, c_opt, s_opt,
-                    _to_jax(batch), sub)
+                    _to_jax(batch), sub, nkey)
                 n_tok += batch["tokens"].size
+                step += 1
+            max_steps = max(max_steps, step)
             cost[ci].add_train(cfg, n_tok, lora_lib.n_params(c_lt),
                                frac_layers=frac_client)
             ledger.record(rnd, ci, "lora_params", M.UP,
                           M.tree_bytes(c_lt))                       # cc1
+            secagg.collect(rnd, ci, c_lt)
             locals_.append(c_lt)
             weights.append(len(data["tokens"]))
+        releases += max_steps
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
         if hetero:                                                  # cc2
             c_global = aggregate_hetero(locals_, ranks, fed.lora_alpha,
                                         fed.lora_rank, weights,
@@ -313,7 +388,8 @@ def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
         acc, loss = evaluate(fns, base, joined, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, releases)))
         if verbose:
             print(f"[split] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
     return FedResult(history, ledger, joined, [c.flops for c in cost])

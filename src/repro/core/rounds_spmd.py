@@ -41,9 +41,12 @@ from repro.core import metrics as M
 from repro.core import split as split_mod
 from repro.core.fedavg import evaluate, make_fns
 from repro.core.heterogeneous import harmonize_buckets
-from repro.core.rounds import FedResult, client_lora_ranks
+from repro.core.rounds import (FedResult, client_lora_ranks,
+                               make_accountant, round_epsilon)
 from repro.data.loader import epoch_batches
 from repro.peft import lora as lora_lib
+from repro.privacy import dp as dp_mod
+from repro.privacy.secure_agg import SecureAggSession
 
 
 def run_spmd(model, base, cfg, fed, targets, public: Dict,
@@ -76,6 +79,9 @@ def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
     global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
                                    fed.lora_alpha)
     round_step = jax.jit(fed_spmd.make_spmd_round(model, fed, task))
+    priv, acct = fed.privacy, make_accountant(fed)
+    noised = priv.noise_std > 0.0
+    secagg = SecureAggSession(fed)
 
     ledger, history, cost = M.CommLedger(), [], \
         [M.ClientCost() for _ in range(n_clients)]
@@ -84,6 +90,7 @@ def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
     n_lora = lora_lib.n_params(global_lt)
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
         batches, valid, n_tok = fed_spmd.stack_client_batches(
             clients_data, batch_size, seeds)
@@ -95,18 +102,33 @@ def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
                                                  n_clients)
         key, sub = jax.random.split(key)
         keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
-        # a2-a4 as one program: vmapped local scans + client-axis FedAvg
-        redist, _, _ = round_step(base, stacked_lt, stacked_opt, batches,
-                                  keys, jnp.asarray(valid), wj)
+        # a2-a4 as one program: vmapped local scans (+ in-program DP
+        # payload noise from the shared per-client fold_in keys) +
+        # client-axis FedAvg; the pre-aggregation uploads come back for
+        # the secure-agg masking overlay
+        extra = (jnp.stack([dp_mod.noise_key(fed, rnd, ci)
+                            for ci in range(n_clients)]),) if noised else ()
+        redist, _, _, uploaded = round_step(
+            base, stacked_lt, stacked_opt, batches, keys,
+            jnp.asarray(valid), wj, *extra)
         global_lt = jax.tree.map(lambda x: x[0], redist)
         # a3: upload — same shapes as the download
         ledger.record_batch(rnd, "lora_params", M.UP, [lt_bytes] * n_clients)
+        if priv.dp_enabled:
+            ledger.record_batch(rnd, "dp_meta", M.UP,
+                                [M.DP_META_BYTES] * n_clients)
+        if secagg.enabled:
+            for ci, t in enumerate(fed_spmd.unstack_tree(uploaded)):
+                secagg.collect(rnd, ci, t)
+            secagg.deliver(ledger, rnd,
+                           [(rnd, ci) for ci in range(n_clients)])
         for ci in range(n_clients):
             cost[ci].add_train(cfg, n_tok[ci], n_lora)
         acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, rnd + 1)))
         if verbose:
             print(f"[fedllm/spmd] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f}")
@@ -127,12 +149,15 @@ def _run_fedllm_spmd_hetero(model, base, cfg, fed, targets, clients_data,
                                    fed.lora_alpha)
     bucket_update = fed_spmd.make_bucket_update(model, fed, task)
     buckets = fed_spmd.rank_buckets(ranks)
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
 
     ledger, history, cost = M.CommLedger(), [], \
         [M.ClientCost() for _ in range(n_clients)]
     weights, _ = _client_weights(clients_data)
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
         bucket_trees, bucket_clients = [], []
         for rank, cis in buckets:
@@ -152,20 +177,32 @@ def _run_fedllm_spmd_hetero(model, base, cfg, fed, targets, clients_data,
             # a2: one stacked program per bucket
             new_lt, _, _ = bucket_update(base, stacked_lt, stacked_opt,
                                          batches, keys, jnp.asarray(valid))
-            # a3: upload — rank-exact per-bucket wire bytes
+            # a3: upload — rank-exact per-bucket wire bytes; DP payload
+            # noise per client (host side — the bucket programs return
+            # pre-aggregation trees anyway), then secure-agg masking
+            trees = fed_spmd.unstack_tree(new_lt)
+            trees = [dp_mod.privatize_tree(
+                t, dp_mod.noise_key(fed, rnd, ci), priv.noise_std)
+                for ci, t in zip(cis, trees)]
             ledger.record_bucket(rnd, cis, "lora_params", M.UP, lt_bytes)
+            if priv.dp_enabled:
+                ledger.record_bucket(rnd, cis, "dp_meta", M.UP,
+                                     M.DP_META_BYTES)
             for k, ci in enumerate(cis):
+                secagg.collect(rnd, ci, trees[k])
                 cost[ci].add_train(cfg, n_tok[k], n_lora)
-            bucket_trees.append(fed_spmd.unstack_tree(new_lt))
+            bucket_trees.append(trees)
             bucket_clients.append(list(cis))
         # a4: cross-bucket harmonization (zeropad | svd)
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
         global_lt = harmonize_buckets(bucket_trees, bucket_clients, ranks,
                                       fed.lora_alpha, fed.lora_rank,
                                       weights, fed.hetero_agg)
         acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, rnd + 1)))
         if verbose:
             print(f"[fedllm/spmd-hetero] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f}")
@@ -229,6 +266,8 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
     n_clients = len(clients_data)
     ranks = client_lora_ranks(fed, n_clients)
     buckets = fed_spmd.rank_buckets(ranks)
+    priv, acct = fed.privacy, make_accountant(fed)
+    secagg = SecureAggSession(fed)
 
     # per-bucket stacked client state (same fold_in(key, ci) init stream
     # as the sequential backend, so hetero init is bit-identical)
@@ -251,6 +290,7 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
     pub_tok = public["tokens"].size
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
         uploaded = [None] * n_clients
         for bi, (rank, cis) in enumerate(buckets):
@@ -265,14 +305,23 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
             # b2: batched logit production on the public set -> (|b|, N, D)
             logits_cnd = _batched_public_logits(kfns, base, b_lts[bi],
                                                 public, eval_batch)
-            # b3: per-simulated-client compression + upload accounting
+            # b3: per-simulated-client privatization (row-clipped noisy
+            # logits — same fold_in keys as the sequential backend) +
+            # compression + upload accounting
             for k, ci in enumerate(cis):
-                lg, wire = kd_mod.compress_for_wire(logits_cnd[k], fed)
+                lg = dp_mod.privatize_logits(
+                    logits_cnd[k], dp_mod.noise_key(fed, rnd, ci), fed)
+                lg, wire = kd_mod.compress_for_wire(lg, fed)
                 ledger.record(rnd, ci, "logits", M.UP, wire)
+                if priv.dp_enabled:
+                    ledger.record(rnd, ci, "dp_meta", M.UP,
+                                  M.DP_META_BYTES)
+                secagg.collect(rnd, ci, lg)
                 uploaded[ci] = lg
                 cost[ci].add_train(cfg, n_tok[k], b_nlora[bi])
                 cost[ci].add_fwd(cfg, pub_tok)
         # b4: knowledge processing as a client-axis reduction (on device)
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
         teacher = kd_mod.aggregate_knowledge_batched(
             jnp.stack(uploaded), weights)
         # b5: server-side distillation into the global model
@@ -294,7 +343,8 @@ def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
         acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, rnd + 1)))
         if verbose:
             print(f"[kd/spmd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
     return FedResult(history, ledger, server_lt, [c.flops for c in cost])
@@ -318,6 +368,10 @@ def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
     n_clients = len(clients_data)
     L = sfns["n_client_groups"]
     frac_client = L / max(sfns["n_groups"], 1)
+    priv, acct = fed.privacy, make_accountant(fed)
+    noised = priv.noise_std > 0.0
+    secagg = SecureAggSession(fed)
+    releases = 0
 
     full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
                                  fed.lora_alpha)
@@ -333,6 +387,7 @@ def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
     joined = full_lt
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         batches, valid, n_tok = fed_spmd.stack_client_batches(
             clients_data, batch_size, [fed.seed * 983 + rnd])
         key, sub = jax.random.split(key)
@@ -345,17 +400,29 @@ def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
             for _ in range(int(valid[ci].sum())):
                 ledger.record(rnd, ci, "activations", M.UP, up + lbl)  # c2
                 ledger.record(rnd, ci, "act_grads", M.DOWN, down)      # c4
+                if priv.dp_enabled:
+                    ledger.record(rnd, ci, "dp_meta", M.UP,
+                                  M.DP_META_BYTES)
             cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
                                frac_layers=frac_client)
             ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)     # cc1
-        c_global, s_lt, s_opt, _ = round_step(
+        extra = (dp_mod.noise_key_grid(fed, rnd, range(n_clients),
+                                       valid.shape[1]),) if noised else ()
+        c_global, s_lt, s_opt, _, stacked_c = round_step(
             base_c, base_s, c_global, s_lt, s_opt, batches, keys,
-            jnp.asarray(valid), wj)
+            jnp.asarray(valid), wj, *extra)
+        if secagg.enabled:
+            for ci, t in enumerate(fed_spmd.unstack_tree(stacked_c)):
+                secagg.collect(rnd, ci, t)
+            secagg.deliver(ledger, rnd,
+                           [(rnd, ci) for ci in range(n_clients)])
+        releases += int(valid.sum(axis=1).max())
         joined = split_mod.join_lora(c_global, s_lt)
         acc, loss = evaluate(fns, base, joined, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, releases)))
         if verbose:
             print(f"[split/spmd] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f}")
@@ -454,6 +521,8 @@ def spmd_split_exec(model, base, cfg, fed, targets, clients_data, public,
                                                         sfns=ex.sfns))
     base_c, base_s = ex.base_c, ex.base_s
 
+    noised = fed.privacy.noise_std > 0.0
+
     def train(jobs, rnd):
         by_ci = dict(jobs)
         results = {}
@@ -464,9 +533,12 @@ def spmd_split_exec(model, base, cfg, fed, targets, clients_data, public,
                 [clients_data[ci] for ci in cis], batch_size,
                 [fed.seed * 983 + rnd])
             keys = _grid_keys(fed, rnd, cis, valid.shape[1])
+            extra = (dp_mod.noise_key_grid(fed, rnd, cis,
+                                           valid.shape[1]),) if noised \
+                else ()
             stacked_c, ex.s_lt, ex.s_opt, _ = seg_step(
                 base_c, base_s, by_ci[cis[0]], ex.s_lt, ex.s_opt, batches,
-                keys, jnp.asarray(valid))
+                keys, jnp.asarray(valid), *extra)
             shape = tuple(batches["tokens"].shape[-2:])
             for k, (ci, t) in enumerate(
                     zip(cis, fed_spmd.unstack_tree(stacked_c))):
@@ -495,6 +567,10 @@ def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
     L = sfns["n_client_groups"]
     frac_client = L / max(sfns["n_groups"], 1)
     segments = fed_spmd.rank_segments(ranks)
+    priv, acct = fed.privacy, make_accountant(fed)
+    noised = priv.noise_std > 0.0
+    secagg = SecureAggSession(fed)
+    releases = 0
 
     full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
                                  fed.lora_alpha)
@@ -508,6 +584,7 @@ def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
     joined = full_lt
 
     for rnd in range(fed.rounds):
+        secagg.begin_cohort(ledger, rnd, range(n_clients))
         batches, valid, n_tok = fed_spmd.stack_client_batches(
             clients_data, batch_size, [fed.seed * 983 + rnd])
         key, sub = jax.random.split(key)
@@ -527,16 +604,27 @@ def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
                     ledger.record(rnd, ci, "activations", M.UP,
                                   up + lbl)                             # c2
                     ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
+                    if priv.dp_enabled:
+                        ledger.record(rnd, ci, "dp_meta", M.UP,
+                                      M.DP_META_BYTES)
                 cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
                                    frac_layers=frac_client)
                 ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)    # cc1
+            extra = (dp_mod.noise_key_grid(fed, rnd, cis,
+                                           valid.shape[1]),) if noised \
+                else ()
             stacked_c, s_lt, s_opt, _ = seg_step(
                 base_c, base_s, c_init, s_lt, s_opt,
                 {k: v[lo:hi] for k, v in batches.items()},
-                keys[lo:hi], jnp.asarray(valid[lo:hi]))
-            seg_trees.append(fed_spmd.unstack_tree(stacked_c))
+                keys[lo:hi], jnp.asarray(valid[lo:hi]), *extra)
+            trees = fed_spmd.unstack_tree(stacked_c)
+            for ci, t in zip(cis, trees):
+                secagg.collect(rnd, ci, t)
+            seg_trees.append(trees)
             seg_clients.append(list(cis))
         # cc2: harmonize the client halves across segments
+        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
+        releases += int(valid.sum(axis=1).max())
         c_global = harmonize_buckets(seg_trees, seg_clients, ranks,
                                      fed.lora_alpha, fed.lora_rank,
                                      weights, fed.hetero_agg)
@@ -544,7 +632,8 @@ def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
         acc, loss = evaluate(fns, base, joined, test, eval_batch)
         history.append(M.RoundMetrics(
             rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost]))))
+            float(np.mean([c.flops for c in cost])),
+            epsilon=round_epsilon(acct, releases)))
         if verbose:
             print(f"[split/spmd-hetero] round {rnd}: acc={acc:.4f} "
                   f"loss={loss:.4f}")

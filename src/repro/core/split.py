@@ -94,6 +94,7 @@ def make_split_fns(model: Model, fed: FedConfig,
     L = min(max(fed.split_layer, 0), n_groups - 1) if not \
         cfg.is_encoder_decoder else 0
     qbits = fed.activation_quant_bits
+    priv = fed.privacy
 
     def _bind(base, lt, rng=None):
         # rank read off the tree: heterogeneous client halves arrive
@@ -108,7 +109,17 @@ def make_split_fns(model: Model, fed: FedConfig,
             return y
         return x
 
-    def split_step(base_c, base_s, c_lt, s_lt, c_opt, s_opt, batch, rng):
+    def split_step(base_c, base_s, c_lt, s_lt, c_opt, s_opt, batch, rng,
+                   nkey=None):
+        """One split training step.  ``nkey`` is the per-(client, round,
+        step) privacy noise key (privacy/dp.noise_key) consumed by the
+        c2 activation mechanism when ``PrivacyConfig.dp_clip > 0``:
+        each boundary token row is L2-clipped to dp_clip and carries
+        Gaussian noise of stddev sigma*C *before* quantization — the
+        transmitted payload is the protected one.  The c4 gradient
+        download (server -> client) is not part of this threat surface.
+        Noise keys come from a dedicated fold_in stream, never the
+        dropout RNG, so both backends draw identical noise."""
         tokens = batch["tokens"]
 
         if cfg.is_encoder_decoder:
@@ -150,8 +161,11 @@ def make_split_fns(model: Model, fed: FedConfig,
                 loss, _ = task_loss(logits, batch)
                 return loss + aux
 
-        # c1/c2: client forward, activations "up" (quantized)
+        # c1/c2: client forward, activations "up" (privatized, quantized)
         h, client_vjp = jax.vjp(client_fwd, c_lt)
+        if priv.dp_enabled:
+            from repro.privacy import dp as dp_mod
+            h = dp_mod.privatize_rows(h, nkey, fed)
         h_wire = _maybe_q(h)
         # c3: server forward/backward
         loss, (s_grads, h_grad) = jax.value_and_grad(

@@ -24,6 +24,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dp_clip as _dp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kd_loss as _kd
 from repro.kernels import lora_matmul as _lm
@@ -200,6 +201,21 @@ def quantize_pack4(x, br: int = 8):
     q, sc = _q.quantize_pack4_rows(xf, br=fit_block(R, br, align=1),
                                    interpret=INTERPRET)
     return q.reshape(*lead, (C + 1) // 2), sc.reshape(*lead, 1)
+
+
+def clip_mean_rows(g, clip: float, block_p: int = 2048):
+    """g: (B, P) stacked per-example grads -> (P,) fp32 mean of the
+    per-example L2-clipped rows — the DP-SGD clip-scale-accumulate step
+    (privacy/dp.py).  Under the ``pallas`` policy this is the fused
+    two-phase kernel (kernels/dp_clip.py); otherwise the XLA reference.
+    Forward-only (runs on gradients; never differentiated through)."""
+    from repro.kernels import ref as _ref
+    if not use_pallas():
+        return _ref.clip_mean_rows_ref(g, clip)
+    P = g.shape[1]
+    return _dp.dp_clip_mean_rows(g, clip=float(clip),
+                                 bp=fit_block(P, block_p),
+                                 interpret=INTERPRET)[0]
 
 
 def topk_quantize(x, k: int, bits: int = 8, br: int = 8):

@@ -88,6 +88,16 @@ def quantize_rows_ref(x, bits: int = 8):
     return q, scale.astype(jnp.float32)
 
 
+def clip_mean_rows_ref(g, clip: float):
+    """Mean of per-row L2-clipped (B, P) grads -> (P,) fp32 — the DP-SGD
+    clip-scale-accumulate oracle (kernels/dp_clip.py).  Uses optim/clip's
+    fp32 eps-guarded scale so the host/ref/kernel trio stay bit-matched."""
+    from repro.optim.clip import _clip_scale
+    g32 = g.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(g32 * g32, axis=1, keepdims=True))
+    return jnp.mean(g32 * _clip_scale(norms, clip), axis=0)
+
+
 def topk_quantize_rows_ref(x, k: int, bits: int = 8):
     """Top-k by value then symmetric int quantization of the k values."""
     qmax = float((1 << (bits - 1)) - 1)

@@ -42,13 +42,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             scan_layers: bool = True, verbose: bool = True,
             parse_collectives: bool = True,
             fed_framework: str = "fedllm", kernel_policy: str = None,
-            client_ranks=None, aggregation: str = "sync") -> dict:
+            client_ranks=None, aggregation: str = "sync",
+            dp_clip: float = 0.0, dp_noise_multiplier: float = 0.0,
+            secure_agg: bool = False) -> dict:
+    from repro.configs.base import PrivacyConfig
+
     cfg = get_config(arch)
     if kernel_policy:
         # thread ModelConfig.kernel_policy through the lowering path —
         # launch/steps traces every step under the config's policy scope
         cfg = dataclasses.replace(cfg, kernel_policy=kernel_policy)
     shape = SHAPES[shape_name]
+    privacy = PrivacyConfig(dp_clip=dp_clip,
+                            dp_noise_multiplier=dp_noise_multiplier,
+                            secure_agg=secure_agg)
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "step": shape.mode if step == "auto" else step,
@@ -61,6 +68,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         rec["aggregation"] = aggregation
         if client_ranks:
             rec["client_ranks"] = list(client_ranks)
+        if privacy.enabled:
+            # per-config privacy record: the knobs plus the secure-agg
+            # setup bytes (host-side overlay — not part of the program).
+            # The sync masking cohort is the whole client set, which for
+            # the dry-run build is len(client_ranks) or the builder's
+            # 2-client default.
+            rec["dp_clip"] = dp_clip
+            rec["dp_noise_multiplier"] = dp_noise_multiplier
+            rec["secure_agg"] = secure_agg
+            if secure_agg:
+                from repro.privacy.secure_agg import key_exchange_bytes
+                cohort = len(client_ranks) if client_ranks else 2
+                up, down = key_exchange_bytes(cohort)
+                rec["secagg_key_bytes_per_client"] = up + down
 
     # Heterogeneous client_ranks compile one stacked program per rank
     # bucket (core/rounds_spmd.py runs exactly these per-bucket
@@ -95,7 +116,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                 if step == "fed_round":
                     fn, args, shardings = steps_mod.build_fed_round_step(
                         cfg, shape, mesh, remat=remat,
-                        framework=fed_framework, **build_kw)
+                        framework=fed_framework, privacy=privacy,
+                        **build_kw)
                 else:
                     fn, args, shardings = steps_mod.build_step(
                         cfg, shape, mesh, scan_layers=scan_layers,
@@ -107,6 +129,28 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                 t_comp = time.time() - t0 - t_low
             finally:
                 common.enable_shard_hints(False)
+
+            from repro.kernels import ops as kernel_ops
+            if step == "fed_round" and privacy.dp_clip > 0 \
+                    and fed_framework in ("fedllm", "kd") \
+                    and kernel_ops.resolve(cfg.kernel_policy) == "pallas":
+                # verify the DP machinery actually reached the jitted
+                # round: under the pallas policy the fused clip kernel
+                # must appear in the traced jaxpr by name.  (Split's
+                # threat surface is the c2 activation clip+noise — jnp
+                # row math inside split_step, no per-example grads — so
+                # there is no clip kernel to find in its round.  The
+                # extra trace only runs for this pallas gate; under xla
+                # the kernel can never appear, so nothing to check.)
+                txt = str(jax.make_jaxpr(fn)(*args))
+                in_jaxpr = "dp_clip_mean_rows" in txt
+                rec["dp_clip_kernel_in_jaxpr"] = in_jaxpr
+                if not in_jaxpr:
+                    raise RuntimeError(
+                        "--dp-clip with --kernel-policy pallas but the "
+                        "dp_clip_mean_rows kernel is not in the traced "
+                        "jaxpr — the DP-SGD path did not reach the "
+                        "jitted round")
 
             ma = compiled.memory_analysis()
             ca = cost_analysis_dict(compiled)
@@ -191,6 +235,19 @@ def main():
                     help="aggregation schedule axis to record; async "
                          "reuses the per-bucket local-update programs "
                          "(arrival scheduling is host-side)")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="per-example L2 clip for --step fed_round: the "
+                         "fused DP-SGD clip kernel enters the jitted "
+                         "round (verified in the traced jaxpr under "
+                         "--kernel-policy pallas)")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    help="Gaussian noise multiplier sigma (payload noise "
+                         "stddev = sigma * clip); adds the per-client "
+                         "noise-key inputs to the lowered round")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="record the simulated secure-aggregation "
+                         "overlay (host-side masking; key-exchange "
+                         "bytes in the record)")
     ap.add_argument("--remat", default="full", choices=["none", "full"])
     ap.add_argument("--no-scan", action="store_true")
     ap.add_argument("--out", default=None, help="write JSON records here")
@@ -216,7 +273,11 @@ def main():
                                    fed_framework=args.fed_framework,
                                    kernel_policy=args.kernel_policy,
                                    client_ranks=ranks,
-                                   aggregation=args.aggregation))
+                                   aggregation=args.aggregation,
+                                   dp_clip=args.dp_clip,
+                                   dp_noise_multiplier=(
+                                       args.dp_noise_multiplier),
+                                   secure_agg=args.secure_agg))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

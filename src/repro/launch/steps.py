@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, PrivacyConfig, ShapeConfig
 from repro.core import fed_spmd
 from repro.configs.base import FedConfig
 from repro.launch import specs as specs_mod
@@ -131,11 +131,18 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                          n_clients: int = 2, n_local_steps: int = 1,
                          remat: str = "full", lora_rank: int = LORA_RANK,
-                         framework: str = "fedllm"):
+                         framework: str = "fedllm",
+                         privacy: PrivacyConfig = None):
     """Multi-pod federated round for any of the three frameworks:
     clients on the ``pod`` axis, server aggregation as a cross-pod
     all-reduce (DESIGN SS2, core/fed_spmd.py).  ``framework`` selects the
-    FedLLM FedAvg round, the KD knowledge round, or the Split round."""
+    FedLLM FedAvg round, the KD knowledge round, or the Split round.
+
+    ``privacy`` threads PrivacyConfig into the lowered round: per-example
+    DP-SGD clipping inside the local update (the fused clip kernel is in
+    the traced program under ``kernel_policy="pallas"`` — dryrun verifies
+    this), DP payload/activation noise from extra noise-key inputs, and
+    the b3/c2 mechanisms of the KD/Split rounds."""
     model = build_model(cfg)
     policy = ShardingPolicy(mesh, cfg)
     params_shape = model.init_abstract(dtype=jnp.bfloat16)
@@ -184,6 +191,12 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                 mesh.shape["data"], 1) == 0 else None,
             *([None] * (x.ndim - 3)))), batch_shape)
 
+    privacy = privacy or PrivacyConfig()
+    client_keys_shape = jax.eval_shape(
+        lambda: jax.random.split(jax.random.PRNGKey(0), n_clients))
+    ckeys_sh = policy.named(
+        P(pod, *([None] * (len(client_keys_shape.shape) - 1))))
+
     # everything the per-framework builders share, by name
     ctx = SimpleNamespace(
         model=model, cfg=cfg, shape=shape, mesh=mesh, policy=policy,
@@ -194,16 +207,22 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
         weights_shape=weights_shape, param_sh=param_sh, slt_sh=slt_sh,
         sopt_sh=sopt_sh, keys_sh=keys_sh, valid_sh=valid_sh,
         weights_sh=weights_sh, stacked_batch=_stacked_batch,
-        batch_sh=_batch_sh)
+        batch_sh=_batch_sh, privacy=privacy,
+        client_keys_shape=client_keys_shape, ckeys_sh=ckeys_sh)
 
     if framework == "fedllm":
-        fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA)
+        fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA,
+                        privacy=privacy)
         round_step = fed_spmd.make_spmd_round(model, fed, task="generative")
         batch_shape = _stacked_batch(False)
         args = (params_shape, slt_shape, sopt_shape, batch_shape,
                 keys_shape, valid_shape, weights_shape)
         shardings = (param_sh, slt_sh, sopt_sh, _batch_sh(batch_shape),
                      keys_sh, valid_sh, weights_sh)
+        if privacy.noise_std > 0.0:
+            # one payload-noise key per client slot (a3 upload boundary)
+            args = args + (client_keys_shape,)
+            shardings = shardings + (ckeys_sh,)
         return _policy_scoped(round_step, cfg), args, shardings
     if framework == "kd":
         return _build_kd_round(ctx)
@@ -223,19 +242,30 @@ def _build_kd_round(ctx):
 
     model, policy, shape = ctx.model, ctx.policy, ctx.shape
     fed = FedConfig(framework="kd", lora_rank=ctx.lora_rank,
-                    lora_alpha=LORA_ALPHA, lora_dropout=0.0)
+                    lora_alpha=LORA_ALPHA, lora_dropout=0.0,
+                    privacy=ctx.privacy)
     fns = make_fns(model, fed, task="classification")
     local_update = fed_spmd.make_local_update(model, fed,
                                               task="classification")
+    noised = ctx.privacy.noise_std > 0.0
 
     def kd_round_core(base, slt, sopt, server_lt, server_opt, batches,
                       keys, valid, weights, public_batch, client_keys,
-                      server_key):
+                      server_key, noise_keys=None):
         slt, sopt, _ = jax.vmap(
             local_update, in_axes=(None, 0, 0, 0, 0, 0))(
                 base, slt, sopt, batches, keys, valid)
         logits = jax.vmap(fns["logits_fn"], in_axes=(None, 0, None))(
             base, slt, public_batch)                       # (C, Bp, D)
+        if fed.privacy.dp_enabled:
+            # b3 mechanism: per-client row-clipped noisy knowledge
+            from repro.privacy import dp as dp_mod
+            if noised:
+                logits = jax.vmap(
+                    lambda lg, k: dp_mod.privatize_rows(lg, k, fed))(
+                        logits, noise_keys)
+            else:
+                logits = dp_mod.privatize_rows(logits, None, fed)
         teacher = kd_mod.aggregate_knowledge_batched(logits, weights)
         server_lt, server_opt, _ = fns["kd_step"](
             base, server_lt, server_opt, public_batch, teacher, server_key)
@@ -270,6 +300,10 @@ def _build_kd_round(ctx):
     shardings = (ctx.param_sh, ctx.slt_sh, ctx.sopt_sh, lt_sh, opt_sh,
                  ctx.batch_sh(batch_shape), ctx.keys_sh, ctx.valid_sh,
                  ctx.weights_sh, pub_sh, ckeys_sh, skey_sh)
+    if noised:
+        # per-client b3 noise keys (upload-boundary mechanism)
+        args = args + (ctx.client_keys_shape,)
+        shardings = shardings + (ctx.ckeys_sh,)
     return _policy_scoped(kd_round_core, ctx.cfg), args, shardings
 
 
@@ -280,7 +314,8 @@ def _build_split_round(ctx):
 
     model, policy = ctx.model, ctx.policy
     fed = FedConfig(framework="split", lora_rank=ctx.lora_rank,
-                    lora_alpha=LORA_ALPHA, lora_dropout=0.0)
+                    lora_alpha=LORA_ALPHA, lora_dropout=0.0,
+                    privacy=ctx.privacy)
     sfns = split_mod.make_split_fns(model, fed, task="generative")
     L = sfns["n_client_groups"]
     round_step = fed_spmd.make_split_spmd_round(model, fed,
@@ -308,6 +343,12 @@ def _build_split_round(ctx):
             ctx.weights_shape)
     shardings = (base_c_sh, base_s_sh, c_sh, s_sh, s_opt_sh, batch_sh,
                  keys_sh, valid_sh, weights_sh)
+    if ctx.privacy.noise_std > 0.0:
+        # (C, S) grid of c2 activation noise keys, scanned with the
+        # batches (the client axis is scanned — no pod sharding)
+        args = args + (ctx.keys_shape,)
+        shardings = shardings + (
+            policy.named(P(*([None] * len(ctx.keys_shape.shape)))),)
     return _policy_scoped(round_step, ctx.cfg), args, shardings
 
 

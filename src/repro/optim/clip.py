@@ -1,8 +1,24 @@
-"""Gradient utilities: global-norm clip, finite-check."""
+"""Gradient utilities: global-norm clip (whole-tree and stacked
+per-example variants), finite-check.
+
+All norm/scale arithmetic runs in float32 regardless of leaf dtype —
+under bf16 trees the old ``max_norm / (norm + 1e-9)`` guard could see
+its epsilon rounded away (bf16 has ~8 significand bits) and the ratio
+computed at leaf precision; the guard here is an explicit fp32
+``maximum(norm, eps)`` so the scale is exact and finite for any leaf
+dtype, including an all-zero tree.
+
+The per-example variants treat leading axis 0 of every leaf as the
+example axis — the shape DP-SGD's stacked per-example LoRA gradient
+trees arrive in (privacy/dp.py; the fused Pallas clip-scale-accumulate
+kernel in kernels/dp_clip.py is the hot-path twin of this reference).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+EPS = 1e-9
 
 
 def global_norm(tree) -> jax.Array:
@@ -11,11 +27,47 @@ def global_norm(tree) -> jax.Array:
     return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
 
 
+def _clip_scale(norm, max_norm: float) -> jax.Array:
+    """fp32 scale ``min(1, C / max(norm, eps))`` — dtype-safe for any
+    leaf dtype (the epsilon guard never touches sub-fp32 precision)."""
+    norm32 = jnp.asarray(norm, jnp.float32)
+    return jnp.minimum(jnp.float32(1.0),
+                       jnp.float32(max_norm) / jnp.maximum(norm32, EPS))
+
+
 def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    scale = _clip_scale(norm, max_norm)
     return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
                                    ).astype(x.dtype), tree), norm
+
+
+def per_example_global_norm(tree) -> jax.Array:
+    """(B,) global norms of a stacked per-example tree: every leaf has
+    example axis 0; the norm of example ``b`` spans all leaves' ``[b]``
+    slices.  fp32 accumulation independent of leaf dtype."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32)).reshape(x.shape[0], -1),
+                  axis=1) for x in leaves]
+    return jnp.sqrt(sum(sq))
+
+
+def clip_per_example(tree, max_norm: float):
+    """Clip every example slice of a stacked tree to ``max_norm``.
+
+    Returns ``(clipped_tree, norms)`` where ``norms`` is the (B,) vector
+    of pre-clip global norms.  Leaf dtypes are preserved; scales are
+    fp32 (dtype-safe under bf16 trees)."""
+    norms = per_example_global_norm(tree)
+    scale = _clip_scale(norms, max_norm)                    # (B,)
+
+    def clip_leaf(x):
+        s = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * s).astype(x.dtype)
+
+    return jax.tree.map(clip_leaf, tree), norms
 
 
 def all_finite(tree) -> jax.Array:

@@ -1,0 +1,79 @@
+"""RDP (moments) accountant for the Gaussian mechanism.
+
+Every private release in this codebase is a full-participation Gaussian
+mechanism: the client clips the sensitive quantity to L2 norm ``C``
+(per-example gradients during local training; rows of the uploaded
+logits/activations) and adds ``N(0, (sigma * C)^2)`` noise, so each
+release is (alpha, alpha / (2 sigma^2))-RDP at every order alpha and
+releases compose additively in RDP.  No subsampling amplification is
+claimed: the engines run every client over its full local dataset each
+round (sample rate q = 1), which is exactly the regime where the
+RDP-of-Gaussian composition is tight.
+
+Conversion to (eps, delta) uses the classic bound
+
+    eps = min_alpha [ T * alpha / (2 sigma^2) + log(1/delta)/(alpha-1) ]
+
+whose analytic optimum ``T/(2 sigma^2) + sqrt(2 T log(1/delta)) / sigma``
+(attained at alpha* = 1 + sigma * sqrt(2 log(1/delta) / T)) is pinned by
+the unit tests against the grid minimum.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+# Dense low orders (where the optimum lands for few steps / small
+# sigma) plus a geometric tail for heavily-composed regimes.
+DEFAULT_ORDERS: Sequence[float] = tuple(
+    [1.0 + x / 10.0 for x in range(1, 100)]
+    + list(range(11, 64))
+    + [2 ** p for p in range(6, 10)])
+
+
+def gaussian_rdp(order: float, noise_multiplier: float) -> float:
+    """RDP of one Gaussian mechanism release at ``order`` (sigma in
+    units of the clip norm): alpha / (2 sigma^2)."""
+    if noise_multiplier <= 0.0:
+        return math.inf
+    return order / (2.0 * noise_multiplier ** 2)
+
+
+def rdp_to_eps(rdp: float, order: float, delta: float) -> float:
+    """Classic RDP -> (eps, delta) conversion at one order."""
+    if order <= 1.0:
+        return math.inf
+    return rdp + math.log(1.0 / delta) / (order - 1.0)
+
+
+class GaussianAccountant:
+    """Tracks (eps, delta) of ``steps`` composed Gaussian releases."""
+
+    def __init__(self, noise_multiplier: float, delta: float = 1e-5,
+                 orders: Sequence[float] = DEFAULT_ORDERS):
+        if delta <= 0.0 or delta >= 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {delta}")
+        self.noise_multiplier = float(noise_multiplier)
+        self.delta = float(delta)
+        self.orders = tuple(orders)
+
+    def epsilon(self, steps: int) -> float:
+        """eps after ``steps`` releases (min over the order grid)."""
+        if steps <= 0:
+            return 0.0
+        if self.noise_multiplier <= 0.0:
+            return math.inf
+        return min(
+            rdp_to_eps(steps * gaussian_rdp(a, self.noise_multiplier),
+                       a, self.delta)
+            for a in self.orders)
+
+    def closed_form_epsilon(self, steps: int) -> float:
+        """The analytic optimum of the same bound (test oracle; the grid
+        minimum approaches it from above)."""
+        if steps <= 0:
+            return 0.0
+        s2 = self.noise_multiplier ** 2
+        ln = math.log(1.0 / self.delta)
+        return steps / (2.0 * s2) + math.sqrt(2.0 * steps * ln) \
+            / self.noise_multiplier

@@ -1,0 +1,125 @@
+"""Client-side DP-SGD primitives (``PrivacyConfig.dp_clip`` /
+``dp_noise_multiplier``).
+
+Two mechanisms compose:
+
+- **Per-example gradient clipping** inside every local fine-tune step:
+  the step computes stacked per-example LoRA gradients, flattens them to
+  one (B, P) matrix and runs the fused clip-scale-accumulate kernel
+  (kernels/ops.clip_mean_rows — Pallas under the ``pallas`` policy, the
+  XLA reference otherwise).  Deterministic, so backend parity is free.
+
+- **Seeded Gaussian noise on the uploaded payload**: params (FedLLM),
+  row-clipped logits (KD b3, before compression) or the smashed
+  boundary activations (Split c2).  Noise keys derive from a dedicated
+  ``fold_in`` stream over (privacy seed, round, client[, step]) —
+  *never* the dropout RNG — so the sequential and SPMD backends draw
+  bit-identical noise (tests/test_privacy.py pins this).
+
+The noise scale is ``sigma * C`` (PrivacyConfig.noise_std): each round's
+upload is accounted as one Gaussian-mechanism release of a C-clipped
+quantity (privacy/accountant.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+
+_STREAM = 0x5EC7  # domain separator: privacy noise vs fed/dropout seeds
+
+
+def _run_key(fed: FedConfig):
+    """Root of the privacy noise stream: (fed.seed, privacy.seed) each
+    folded in separately, so distinct config pairs can never collide."""
+    key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), _STREAM)
+    return jax.random.fold_in(key, fed.privacy.seed)
+
+
+def noise_key(fed: FedConfig, rnd: int, ci: int, step: int = 0):
+    """Per-(round, client[, step]) noise key — identical on every
+    execution backend by construction (pure fold_in chain)."""
+    key = jax.random.fold_in(_run_key(fed), rnd)
+    key = jax.random.fold_in(key, ci)
+    return jax.random.fold_in(key, step)
+
+
+def noise_key_grid(fed: FedConfig, rnd: int, cis, n_steps: int):
+    """(|cis|, n_steps) stacked noise keys for the SPMD scan bodies —
+    row k, column s is exactly ``noise_key(fed, rnd, cis[k], s)``
+    (vmapped fold_in: a handful of dispatches, not C*S)."""
+    base = jax.random.fold_in(_run_key(fed), rnd)
+    steps = jnp.arange(n_steps)
+
+    def row(ci):
+        k = jax.random.fold_in(base, ci)
+        return jax.vmap(lambda s: jax.random.fold_in(k, s))(steps)
+
+    return jax.vmap(row)(jnp.asarray(list(cis)))
+
+
+# --------------------------------------------------------------------------- #
+# Per-example clipping (the DP-SGD step body)
+# --------------------------------------------------------------------------- #
+def clipped_grad_mean(per_example_grads, clip: float):
+    """Stacked per-example grad tree (leaves (B, ...)) -> mean tree of
+    the per-example L2-clipped gradients, through the fused kernel."""
+    from repro.kernels import ops as kernel_ops
+
+    leaves, treedef = jax.tree.flatten(per_example_grads)
+    B = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.reshape(B, -1).astype(jnp.float32) for x in leaves], axis=1)
+    mean = kernel_ops.clip_mean_rows(flat, clip)            # (P,) fp32
+    out, off = [], 0
+    for x in leaves:
+        n = x[0].size
+        out.append(mean[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------- #
+# Payload noise (upload boundary)
+# --------------------------------------------------------------------------- #
+def privatize_tree(tree, key, std: float):
+    """tree + iid N(0, std^2) per leaf (fp32 draw, cast to leaf dtype).
+    ``std == 0`` is the identity — no program or bit changes."""
+    if std <= 0.0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    out = [x + (jax.random.normal(jax.random.fold_in(key, i), x.shape,
+                                  jnp.float32) * std).astype(x.dtype)
+           for i, x in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def clip_rows(x, clip: float):
+    """Clip each row (last-axis vector) of ``x`` to L2 norm ``clip``
+    (optim/clip's fp32 eps-guarded scale — one formula everywhere)."""
+    from repro.optim.clip import _clip_scale
+    x32 = x.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(x32 * x32, axis=-1, keepdims=True))
+    return (x32 * _clip_scale(norms, clip)).astype(x.dtype)
+
+
+def privatize_rows(x, key, fed: FedConfig):
+    """Row-clip + Gaussian-noise a (..., d) tensor — the Split boundary
+    activation mechanism (c2) and the building block of
+    ``privatize_logits``.  Identity when DP is off."""
+    priv = fed.privacy
+    if not priv.dp_enabled:
+        return x
+    y = clip_rows(x, priv.dp_clip)
+    if priv.noise_std > 0.0:
+        y = y + (jax.random.normal(key, y.shape, jnp.float32)
+                 * priv.noise_std).astype(y.dtype)
+    return y
+
+
+def privatize_logits(logits, key, fed: FedConfig):
+    """KD b3 upload mechanism: per-row clipped, noised logits — applied
+    *before* the top-k/int-quant compression so the two SSIV.B.2 wire
+    features compose with privacy."""
+    return privatize_rows(logits, key, fed)

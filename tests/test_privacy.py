@@ -1,0 +1,373 @@
+"""Privacy subsystem (src/repro/privacy/, PrivacyConfig):
+
+- secure-agg mask cancellation is *bit-exact* against the plain engines
+  for every framework x backend x aggregation combination, and the
+  privacy-overhead ledger bytes are identical across backends;
+- DP runs are seed-deterministic and hold backend parity (identical
+  ledger bytes; identical noise via the per-client fold_in keys);
+- the fused clip-scale-accumulate kernel matches the XLA reference and
+  the stacked-tree clip helpers in optim/clip are dtype-safe;
+- the RDP accountant's epsilon is monotone in rounds and matches the
+  closed-form Gaussian-mechanism optimum.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, ModelConfig, PrivacyConfig
+from repro.core import metrics as M
+from repro.core.rounds import run_federated
+from repro.data import banking77, partition
+from repro.kernels import ops, ref
+from repro.optim import clip
+from repro.privacy import dp
+from repro.privacy.accountant import GaussianAccountant
+from repro.privacy.secure_agg import SecureAggSession, flat_fixed_point
+
+CFG = ModelConfig(name="priv-t", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=192,
+                  qkv_bias=True, activation="gelu", norm="layernorm",
+                  use_rope=False, max_position_embeddings=64)
+
+FRAMEWORKS = ("fedllm", "kd", "split")
+
+
+@pytest.fixture(scope="module")
+def small_case():
+    pub = banking77.generate(24, CFG.vocab_size, 12, seed=0)
+    tr = banking77.generate(96, CFG.vocab_size, 12, seed=1)
+    te = banking77.generate(16, CFG.vocab_size, 12, seed=2)
+    return pub, partition.iid_partition(tr, 3, seed=0), te
+
+
+def _fed(**kw):
+    base = dict(framework="fedllm", n_clients=3, rounds=1, lora_rank=4,
+                lora_dropout=0.0, split_layer=1, kd_epochs=1, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(fed, case, **kw):
+    pub, clients, te = case
+    return run_federated(CFG, fed, pub, clients, te, batch_size=8,
+                        eval_batch=8, **kw)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------------- #
+# Acceptance: secure-agg masking is bit-transparent at noise 0
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["sequential", "spmd"])
+@pytest.mark.parametrize("framework", FRAMEWORKS)
+def test_secure_agg_sync_bit_exact(small_case, framework, backend):
+    """secure_agg=True (noise 0): histories and final params reproduce
+    the non-private engine bit-for-bit; the ledger differs only by the
+    secagg_* overhead events; mask cancellation is verified inside the
+    session (uint64 arithmetic) on every aggregation."""
+    fed = _fed(framework=framework, backend=backend)
+    plain = _run(fed, small_case)
+    sec = _run(dataclasses.replace(
+        fed, privacy=PrivacyConfig(secure_agg=True)), small_case)
+    for hp, hs in zip(plain.history, sec.history):
+        assert hp.loss == hs.loss, framework
+        assert hp.accuracy == hs.accuracy, framework
+    assert _trees_equal(plain.final_lora, sec.final_lora), framework
+    # ledger: identical modulo the privacy overhead
+    strip = [(e.round, e.client, e.name, e.direction, e.bytes)
+             for e in sec.ledger.payload_events()]
+    full = [(e.round, e.client, e.name, e.direction, e.bytes)
+            for e in plain.ledger.events]
+    assert strip == full, framework
+    assert sec.ledger.privacy_overhead_bytes() > 0, framework
+
+
+@pytest.mark.parametrize("backend", ["sequential", "spmd"])
+@pytest.mark.parametrize("framework", FRAMEWORKS)
+def test_secure_agg_async_bit_exact(small_case, framework, backend):
+    """Same acceptance under async aggregation: start cohorts deliver
+    across rounds, so the dropout/recovery path (mask reconstruction
+    for absent members) runs and still cancels exactly."""
+    fed = _fed(framework=framework, backend=backend, rounds=3,
+               aggregation="async", max_staleness=3)
+    plain = _run(fed, small_case)
+    sec = _run(dataclasses.replace(
+        fed, privacy=PrivacyConfig(secure_agg=True)), small_case)
+    for hp, hs in zip(plain.history, sec.history):
+        assert hp.loss == hs.loss, framework
+        assert hp.accuracy == hs.accuracy, framework
+    assert _trees_equal(plain.final_lora, sec.final_lora), framework
+
+
+def test_secure_agg_overhead_backend_parity(small_case):
+    """Privacy-overhead bytes are identical across execution backends
+    (sync and async) — the acceptance criterion's ledger clause."""
+    for agg, rounds in (("sync", 1), ("async", 3)):
+        for framework in FRAMEWORKS:
+            fed = _fed(framework=framework, rounds=rounds,
+                       aggregation=agg,
+                       privacy=PrivacyConfig(secure_agg=True))
+            seq = _run(fed, small_case)
+            spmd = _run(dataclasses.replace(fed, backend="spmd"),
+                        small_case)
+            key = (framework, agg)
+            assert seq.ledger.privacy_overhead_bytes() == \
+                spmd.ledger.privacy_overhead_bytes(), key
+            seq_pe = [(e.round, e.client, e.name, e.direction, e.bytes)
+                      for e in seq.ledger.events
+                      if e.name in M.PRIVACY_NAMES]
+            spmd_pe = [(e.round, e.client, e.name, e.direction, e.bytes)
+                       for e in spmd.ledger.events
+                       if e.name in M.PRIVACY_NAMES]
+            assert sorted(seq_pe) == sorted(spmd_pe), key
+
+
+def test_secure_agg_async_exercises_recovery(small_case):
+    """With real delays some cohort members are absent from the event
+    that sums their peers, so recovery shares are actually charged."""
+    fed = _fed(rounds=4, aggregation="async", max_staleness=3,
+               privacy=PrivacyConfig(secure_agg=True))
+    res = _run(fed, small_case)
+    assert res.ledger.by_name().get("secagg_recovery", 0) > 0
+
+
+def test_secure_agg_masks_cancel_in_uint64():
+    """Unit-level: masked sums minus recovered residuals equal the
+    plain fixed-point sums exactly, including under partial delivery."""
+    fed = _fed(privacy=PrivacyConfig(secure_agg=True))
+    sess = SecureAggSession(fed)
+    ledger = M.CommLedger()
+    rng = np.random.default_rng(0)
+    payloads = [rng.normal(size=7).astype(np.float32) for _ in range(3)]
+    sess.begin_cohort(ledger, 0, [0, 1, 2])
+    for ci, p in enumerate(payloads):
+        sess.collect(0, ci, p)
+    # each masked upload differs from its plain encoding ...
+    q0 = flat_fixed_point(payloads[0], fed.privacy.secure_agg_frac_bits)
+    assert not np.array_equal(sess.masked(0, 0), q0)
+    # ... but a partial delivery (dropout) still unmasks exactly
+    sess.deliver(ledger, 1, [(0, 0), (0, 2)])      # client 1 absent
+    assert ledger.by_name()["secagg_recovery"] == 2 * 32
+    sess.deliver(ledger, 2, [(0, 1)])              # straggler lands later
+
+
+# --------------------------------------------------------------------------- #
+# DP: determinism, backend parity, identical noise
+# --------------------------------------------------------------------------- #
+DP = PrivacyConfig(dp_clip=1.0, dp_noise_multiplier=0.5)
+
+
+@pytest.mark.parametrize("framework", FRAMEWORKS)
+def test_dp_run_seed_deterministic(small_case, framework):
+    fed = _fed(framework=framework, privacy=DP)
+    a = _run(fed, small_case)
+    b = _run(fed, small_case)
+    assert [h.loss for h in a.history] == [h.loss for h in b.history]
+    assert [h.epsilon for h in a.history] == [h.epsilon for h in b.history]
+    assert _trees_equal(a.final_lora, b.final_lora)
+
+
+@pytest.mark.parametrize("framework", FRAMEWORKS)
+def test_dp_backend_parity(small_case, framework):
+    """Sequential vs SPMD under DP: identical ledger bytes (including
+    dp_meta), epsilon, and losses within fp32 tolerance — the noise is
+    bit-identical via the per-client fold_in keys, so any residual
+    difference is float reduction order only."""
+    fed = _fed(framework=framework, privacy=DP)
+    seq = _run(fed, small_case)
+    spmd = _run(dataclasses.replace(fed, backend="spmd"), small_case)
+    assert seq.ledger.per_client_round() == spmd.ledger.per_client_round()
+    assert seq.ledger.by_name() == spmd.ledger.by_name()
+    assert seq.ledger.by_name().get("dp_meta", 0) > 0
+    for hs, hp in zip(seq.history, spmd.history):
+        assert abs(hs.loss - hp.loss) <= 1e-3, framework
+        assert hs.epsilon == hp.epsilon, framework
+
+
+def test_dp_noise_is_identical_across_backends():
+    """The exact noise both backends add: privatize_tree under vmapped
+    per-client keys reproduces the sequential per-client calls bit-for-
+    bit (the fold_in stream is backend-free)."""
+    fed = _fed(privacy=DP)
+    tree = {"a": jnp.ones((3, 4)), "b": jnp.zeros((2,))}
+    keys = jnp.stack([dp.noise_key(fed, 0, ci) for ci in range(3)])
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (3,) + x.shape), tree)
+    batched = jax.vmap(
+        lambda t, k: dp.privatize_tree(t, k, fed.privacy.noise_std))(
+            stacked, keys)
+    for ci in range(3):
+        one = dp.privatize_tree(tree, dp.noise_key(fed, 0, ci),
+                                fed.privacy.noise_std)
+        for a, b in zip(jax.tree.leaves(one),
+                        jax.tree.leaves(jax.tree.map(lambda x: x[ci],
+                                                     batched))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_noise_key_grid_matches_scalar_keys():
+    """The vmapped (C, S) grid the SPMD split engines consume is
+    bit-identical to the scalar per-(client, step) fold_in chain the
+    sequential engines use."""
+    fed = _fed(privacy=DP)
+    grid = dp.noise_key_grid(fed, 3, [0, 2, 5], 4)
+    for k, ci in enumerate([0, 2, 5]):
+        for s in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(grid[k, s]),
+                np.asarray(dp.noise_key(fed, 3, ci, s)))
+    # distinct (fed.seed, privacy.seed) pairs never collide
+    a = dp.noise_key(_fed(seed=0, privacy=dataclasses.replace(
+        DP, seed=9176)), 0, 0)
+    b = dp.noise_key(_fed(seed=1, privacy=dataclasses.replace(
+        DP, seed=0)), 0, 0)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dp_changes_the_model_and_noise_zero_does_not():
+    tree = {"a": jnp.ones((4, 4))}
+    key = jax.random.PRNGKey(0)
+    assert dp.privatize_tree(tree, key, 0.0) is tree
+    noisy = dp.privatize_tree(tree, key, 0.1)
+    assert not np.array_equal(np.asarray(noisy["a"]),
+                              np.asarray(tree["a"]))
+
+
+def test_noise_without_clip_rejected(small_case):
+    fed = _fed(privacy=PrivacyConfig(dp_noise_multiplier=1.0))
+    with pytest.raises(ValueError, match="dp_clip"):
+        _run(fed, small_case)
+
+
+def test_async_zero_staleness_equals_sync_with_privacy(small_case):
+    """The privacy overlay preserves the async(max_staleness=0) == sync
+    collapse exactly — cohorts, noise keys and dp_meta all line up."""
+    priv = PrivacyConfig(dp_clip=1.0, dp_noise_multiplier=0.5,
+                         secure_agg=True)
+    fed = _fed(rounds=2, privacy=priv)
+    sync = _run(fed, small_case)
+    azync = _run(dataclasses.replace(fed, aggregation="async",
+                                     max_staleness=0), small_case)
+    assert sync.ledger.per_client_round() == azync.ledger.per_client_round()
+    assert sync.ledger.by_name() == azync.ledger.by_name()
+    for hs, ha in zip(sync.history, azync.history):
+        assert hs.loss == ha.loss
+        assert hs.epsilon == ha.epsilon
+
+
+# --------------------------------------------------------------------------- #
+# Clip kernel + stacked-tree clip helpers
+# --------------------------------------------------------------------------- #
+def test_clip_kernel_matches_reference():
+    g = jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, 384)).astype(np.float32)) * 3.0
+    want = ref.clip_mean_rows_ref(g, 1.0)
+    with ops.policy_scope("pallas"):
+        got = ops.clip_mean_rows(g, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+    # odd, prime-ish row width exercises the whole-dim block fallback
+    g2 = jnp.asarray(np.random.default_rng(1).normal(
+        size=(4, 257)).astype(np.float32))
+    with ops.policy_scope("pallas"):
+        got2 = ops.clip_mean_rows(g2, 0.5)
+    np.testing.assert_allclose(np.asarray(got2),
+                               np.asarray(ref.clip_mean_rows_ref(g2, 0.5)),
+                               atol=1e-6)
+
+
+def test_clipped_grad_mean_tree_roundtrip():
+    """Flatten -> clip -> unflatten preserves structure/dtype and
+    matches the optim/clip per-example reference composed with mean."""
+    rng = np.random.default_rng(2)
+    tree = {"w": jnp.asarray(rng.normal(size=(6, 3, 5)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(6, 2)), jnp.bfloat16)}
+    out = dp.clipped_grad_mean(tree, 0.7)
+    assert out["w"].shape == (3, 5) and out["b"].shape == (2,)
+    assert out["b"].dtype == jnp.bfloat16
+    clipped, norms = clip.clip_per_example(tree, 0.7)
+    want = jax.tree.map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0), clipped)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(want["w"]), atol=1e-6)
+    assert bool((norms > 0).all())
+
+
+def test_per_example_clip_helpers_dtype_safe():
+    rng = np.random.default_rng(3)
+    tree = {"x": jnp.asarray(rng.normal(size=(5, 7)) * 10, jnp.bfloat16)}
+    norms = clip.per_example_global_norm(tree)
+    assert norms.dtype == jnp.float32 and norms.shape == (5,)
+    clipped, _ = clip.clip_per_example(tree, 1.0)
+    assert clipped["x"].dtype == jnp.bfloat16
+    post = clip.per_example_global_norm(clipped)
+    assert bool((post <= 1.0 + 0.1).all())      # bf16 rounding slack
+    # all-zero tree: the eps guard keeps the scale finite
+    zeros = {"x": jnp.zeros((3, 4), jnp.bfloat16)}
+    zc, zn = clip.clip_per_example(zeros, 1.0)
+    assert bool(jnp.isfinite(jnp.asarray(zn)).all())
+    assert bool((zc["x"] == 0).all())
+    t, n = clip.clip_by_global_norm(zeros, 1.0)
+    assert bool(jnp.isfinite(n)) and bool((t["x"] == 0).all())
+
+
+def test_per_example_clip_actually_bounds_training_influence(small_case):
+    """End-to-end: a clip-only DP run (no noise) differs from the plain
+    run — the per-example clipping is really in the step."""
+    fed = _fed()
+    plain = _run(fed, small_case)
+    clipped = _run(dataclasses.replace(
+        fed, privacy=PrivacyConfig(dp_clip=1e-3)), small_case)
+    assert not _trees_equal(plain.final_lora, clipped.final_lora)
+    assert np.isfinite(clipped.history[-1].loss)
+
+
+# --------------------------------------------------------------------------- #
+# Accountant
+# --------------------------------------------------------------------------- #
+def test_accountant_monotone_in_rounds():
+    acct = GaussianAccountant(noise_multiplier=1.0, delta=1e-5)
+    eps = [acct.epsilon(t) for t in range(0, 40, 4)]
+    assert eps[0] == 0.0
+    assert all(b > a for a, b in zip(eps[1:], eps[2:]))
+
+
+def test_accountant_matches_closed_form():
+    for sigma in (0.5, 1.0, 2.0):
+        for steps in (1, 10, 100):
+            acct = GaussianAccountant(sigma, delta=1e-5)
+            grid = acct.epsilon(steps)
+            exact = acct.closed_form_epsilon(steps)
+            # grid minimum approaches the analytic optimum from above
+            assert grid >= exact - 1e-9, (sigma, steps)
+            assert grid <= exact * 1.05 + 1e-6, (sigma, steps)
+
+
+def test_accountant_edge_cases():
+    acct = GaussianAccountant(0.0, delta=1e-5)
+    assert math.isinf(acct.epsilon(1))
+    with pytest.raises(ValueError, match="delta"):
+        GaussianAccountant(1.0, delta=2.0)
+
+
+def test_epsilon_reported_per_round(small_case):
+    fed = _fed(rounds=2, privacy=DP)
+    res = _run(fed, small_case)
+    eps = [h.epsilon for h in res.history]
+    assert eps[0] > 0 and eps[1] > eps[0]
+    acct = GaussianAccountant(DP.dp_noise_multiplier, DP.dp_delta)
+    assert eps[0] == acct.epsilon(1) and eps[1] == acct.epsilon(2)
+    # plain runs report 0 (no DP, no accounting, no claim)...
+    assert all(h.epsilon == 0.0 for h in _run(_fed(), small_case).history)
+    # ...while clip-without-noise reports inf (active, no guarantee)
+    clip_only = _run(_fed(privacy=PrivacyConfig(dp_clip=1.0)), small_case)
+    assert all(math.isinf(h.epsilon) for h in clip_only.history)
