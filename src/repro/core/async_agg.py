@@ -1,6 +1,6 @@
 """Asynchronous, staleness-aware aggregation (``FedConfig(aggregation=
-"async")``) — the second scenario axis the paper's comparison needs at
-scale (cf. "Federated LLMs: Current Progress and Future Directions",
+"async")``) — the participation/staleness *model* of the round pipeline
+(cf. "Federated LLMs: Current Progress and Future Directions",
 arXiv:2409.15723): real fleets never deliver every client's update in
 lockstep, so the server must fold in *late* knowledge without stalling
 the round clock.
@@ -19,7 +19,7 @@ Simulation model (FedAsync-style, deterministic under ``FedConfig.seed``):
   anchors the current global, so a lone stale straggler cannot yank the
   model.
 - ``max_staleness == 0`` forces fully synchronous participation, which
-  makes the async engine coincide with the sync engines *exactly* at
+  makes the async schedule coincide with the sync one *exactly* at
   ``lora_dropout == 0`` (tests/test_async_agg.py) — the knob
   interpolates between the paper-literal round and a realistic fleet.
 
@@ -29,31 +29,25 @@ differs is the payload in flight: LoRA **params** for FedLLM, public-set
 (activations/grad traffic stays synchronous inside the training round:
 the server's half is in the loop while a split client trains).
 
-Both execution backends share this driver; only local execution differs
-— the sequential executors below loop clients, the SPMD executors
-(core/rounds_spmd.py) run the round's ready-set as per-rank bucketed
-stacked programs.  Ledger bytes are therefore identical across backends
-by construction, and heterogeneous ``client_ranks`` compose freely with
-async (stale hetero updates harmonize through ``aggregate_hetero``).
+Since the RoundProgram refactor this module only holds the *model* —
+the delay schedule, the in-flight job bookkeeping and the
+staleness-weighted aggregation — which core/round_program.py's
+``AsyncSchedule`` composes with any framework x executor.  Both
+execution backends therefore share one driver by construction, ledgers
+agree across backends, and heterogeneous ``client_ranks`` compose
+freely with async (stale hetero updates harmonize through
+``aggregate_hetero``).
 """
 from __future__ import annotations
 
 import dataclasses
-from types import SimpleNamespace
 from typing import Dict, List
 
-import jax
 import numpy as np
 
-from repro.core import kd as kd_mod
-from repro.core import metrics as M
-from repro.core import split as split_mod
-from repro.core.fedavg import evaluate, fedavg, make_fns
+from repro.core import rng as rng_mod
+from repro.core.fedavg import fedavg
 from repro.core.heterogeneous import aggregate_hetero
-from repro.data.loader import epoch_batches
-from repro.peft import lora as lora_lib
-from repro.privacy import dp as dp_mod
-from repro.privacy.secure_agg import SecureAggSession
 
 
 # --------------------------------------------------------------------------- #
@@ -135,405 +129,22 @@ def stale_weighted_avg(global_tree, arrivals, total_weight: float, fed,
     return fedavg(trees, ws)
 
 
+def _local_rng(fed, rnd: int, ci: int):
+    """Per-(client, round) dropout RNG — kept as an alias of the shared
+    core/rng helper (the single source of truth for the key tree)."""
+    return rng_mod.local_rng(fed, rnd, ci)
+
+
 # --------------------------------------------------------------------------- #
-# Entry point (core/rounds.run_federated dispatches here)
+# Entry point (core/rounds.run_federated dispatches here) — a thin
+# adapter over the unified pipeline
 # --------------------------------------------------------------------------- #
 def run_async(model, base, cfg, fed, targets, public: Dict,
               clients_data: List[Dict], test: Dict, task: str,
               batch_size: int, eval_batch: int, verbose: bool,
-              backend: str = "sequential"):
-    from repro.core.rounds import client_lora_ranks
-
-    ranks = client_lora_ranks(fed, len(clients_data))
-    if backend == "spmd":
-        from repro.core import rounds_spmd
-        make_exec = {"fedllm": rounds_spmd.spmd_fedllm_exec,
-                     "kd": rounds_spmd.spmd_kd_exec,
-                     "split": rounds_spmd.spmd_split_exec}[fed.framework]
-    else:
-        make_exec = {"fedllm": _seq_fedllm_exec, "kd": _seq_kd_exec,
-                     "split": _seq_split_exec}[fed.framework]
-    ex = make_exec(model, base, cfg, fed, targets, clients_data, public,
-                   task, batch_size, eval_batch, ranks)
-    driver = {"fedllm": _drive_fedllm, "kd": _drive_kd,
-              "split": _drive_split}[fed.framework]
-    return driver(ex, base, cfg, fed, clients_data, test, eval_batch,
-                  verbose, ranks)
-
-
-def _local_rng(fed, rnd: int, ci: int):
-    """Per-(client, round) dropout RNG — both backends use the same
-    stream in async mode, so seq/spmd agree bit-exactly at dropout 0 and
-    draw equally valid (different) masks otherwise."""
-    return jax.random.PRNGKey(fed.seed * 1013 + rnd * 131 + ci)
-
-
-# --------------------------------------------------------------------------- #
-# 1) FedLLM async (payload: LoRA params)
-# --------------------------------------------------------------------------- #
-def _drive_fedllm(ex, base, cfg, fed, clients_data, test, eval_batch,
-                  verbose, ranks):
-    from repro.core.rounds import (FedResult, make_accountant,
-                                   round_epsilon)
-
-    n_clients = len(clients_data)
-    key = jax.random.PRNGKey(fed.seed + 1)
-    global_lt = lora_lib.init_lora(key, base, ex.targets, fed.lora_rank,
-                                   fed.lora_alpha)
-    sched = ParticipationSchedule(n_clients, fed.seed + 17,
-                                  fed.max_staleness)
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    data_w = [len(d["tokens"]) for d in clients_data]
-    total_w = float(sum(data_w))
-    in_flight: Dict[int, _Job] = {}
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-    releases = [0] * n_clients      # noisy uploads per client (epsilon)
-
-    for rnd in range(fed.rounds):
-        # every free client pulls the current global and starts a job;
-        # this round's starters form one secure-agg masking cohort (the
-        # payloads are created — and masked — now, even though they may
-        # deliver rounds later)
-        starters = [ci for ci in range(n_clients) if ci not in in_flight]
-        secagg.begin_cohort(ledger, rnd, starters)
-        jobs = []
-        for ci in starters:
-            lt = lora_lib.maybe_truncate_rank(global_lt, ranks[ci],
-                                              fed.lora_rank)
-            ledger.record(rnd, ci, "lora_params", M.DOWN, M.tree_bytes(lt))
-            jobs.append((ci, lt))
-        for (ci, _), (new_lt, n_tok) in zip(jobs, ex.train(jobs, rnd)):
-            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(new_lt))
-            new_lt = dp_mod.privatize_tree(
-                new_lt, dp_mod.noise_key(fed, rnd, ci), priv.noise_std)
-            secagg.collect(rnd, ci, new_lt)
-            releases[ci] += 1
-            in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci),
-                                 new_lt)
-        # fold in this round's arrivals, staleness-weighted; too-stale
-        # masked uploads are dropped (their pairwise masks recovered
-        # like any other absent cohort member's)
-        arrivals, delivered = [], []
-        for j in _pop_arrivals(in_flight, rnd):
-            ledger.record(rnd, j.client, "lora_params", M.UP,
-                          M.tree_bytes(j.payload))
-            if priv.dp_enabled:
-                ledger.record(rnd, j.client, "dp_meta", M.UP,
-                              M.DP_META_BYTES)
-            s = rnd - j.start
-            if s <= fed.max_staleness:
-                arrivals.append((j.client, j.payload, s, data_w[j.client]))
-                delivered.append((j.start, j.client))
-            else:
-                secagg.discard(j.start, j.client)
-        secagg.deliver(ledger, rnd, delivered)
-        if arrivals:
-            global_lt = stale_weighted_avg(global_lt, arrivals, total_w,
-                                           fed, ranks)
-        acc, loss = evaluate(ex.fns, base, global_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, max(releases))))
-        if verbose:
-            print(f"[fedllm/async] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f} arrived={len(arrivals)}")
-    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
-
-
-def _seq_fedllm_exec(model, base, cfg, fed, targets, clients_data, public,
-                     task, batch_size, eval_batch, ranks):
-    fns = make_fns(model, fed, task)
-
-    def train(jobs, rnd):
-        out = []
-        for ci, lt in jobs:
-            opt = fns["opt_init"](lt)
-            rng = _local_rng(fed, rnd, ci)
-            n_tok = 0
-            for ep in range(fed.local_epochs):
-                for batch in epoch_batches(clients_data[ci], batch_size,
-                                           seed=fed.seed * 997 + rnd + ep):
-                    rng, sub = jax.random.split(rng)
-                    jb = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-                    lt, opt, _ = fns["train_step"](base, lt, opt, jb, sub)
-                    n_tok += batch["tokens"].size
-            out.append((lt, n_tok))
-        return out
-
-    return SimpleNamespace(fns=fns, targets=targets, train=train)
-
-
-# --------------------------------------------------------------------------- #
-# 2) KD-FedLLM async (payload: public-set logits)
-# --------------------------------------------------------------------------- #
-def _drive_kd(ex, base, cfg, fed, clients_data, test, eval_batch, verbose,
-              ranks):
-    from repro.core.rounds import (FedResult, make_accountant,
-                                   round_epsilon)
-
-    n_clients = len(clients_data)
-    sched = ParticipationSchedule(n_clients, fed.seed + 17,
-                                  fed.max_staleness)
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    data_w = [len(d["tokens"]) for d in clients_data]
-    pub_tok = ex.public["tokens"].size
-    in_flight: Dict[int, _Job] = {}
-    glob = None                        # latest global knowledge (b6)
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-    releases = [0] * n_clients
-
-    for rnd in range(fed.rounds):
-        # free clients start a job: b1 local FT + b2/b3 knowledge (the
-        # starters are the round's secure-agg masking cohort; the b3
-        # logits are row-clipped + noised before compression)
-        starters = [ci for ci in range(n_clients) if ci not in in_flight]
-        secagg.begin_cohort(ledger, rnd, starters)
-        for ci, (logits, n_tok) in zip(starters,
-                                       ex.train_and_logits(starters, rnd)):
-            logits = dp_mod.privatize_logits(
-                logits, dp_mod.noise_key(fed, rnd, ci), fed)
-            lg, wire = kd_mod.compress_for_wire(logits, fed)
-            secagg.collect(rnd, ci, lg)
-            releases[ci] += 1
-            cost[ci].add_train(cfg, n_tok, ex.n_lora[ci])
-            cost[ci].add_fwd(cfg, pub_tok)
-            in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci),
-                                 (lg, wire))
-        # arrivals: b4 staleness-weighted knowledge processing
-        arrived = _pop_arrivals(in_flight, rnd)
-        kept, ws, delivered = [], [], []
-        for j in arrived:
-            ledger.record(rnd, j.client, "logits", M.UP, j.payload[1])
-            if priv.dp_enabled:
-                ledger.record(rnd, j.client, "dp_meta", M.UP,
-                              M.DP_META_BYTES)
-            s = rnd - j.start
-            if s <= fed.max_staleness:
-                kept.append(j.payload[0])
-                ws.append(data_w[j.client]
-                          * staleness_weight(s, fed.staleness_decay))
-                delivered.append((j.start, j.client))
-            else:
-                secagg.discard(j.start, j.client)
-        secagg.deliver(ledger, rnd, delivered)
-        if kept:
-            teacher = kd_mod.aggregate_knowledge(kept, ws)
-            # b5: distill the (possibly stale) knowledge into the server
-            ex.server_lt, ex.server_opt, _ = kd_mod.distill(
-                ex.fns, base, ex.server_lt, ex.server_opt, ex.public,
-                teacher, fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
-            glob = kd_mod.client_logits(ex.fns, base, ex.server_lt,
-                                        ex.public, eval_batch)
-        # b6-b8: delivering clients re-sync against the latest knowledge
-        if arrived and glob is not None:
-            glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
-            cis = [j.client for j in arrived]
-            for ci in cis:
-                ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
-                cost[ci].add_train(cfg, pub_tok * fed.kd_epochs,
-                                   ex.n_lora[ci])
-            ex.distill(cis, glob, rnd)
-        acc, loss = evaluate(ex.fns, base, ex.server_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, max(releases))))
-        if verbose:
-            print(f"[kd/async] round {rnd}: acc={acc:.4f} loss={loss:.4f} "
-                  f"arrived={len(arrived)}")
-    return FedResult(history, ledger, ex.server_lt,
-                     [c.flops for c in cost])
-
-
-def make_kd_state(model, base, fed, targets, ranks, public,
-                  task: str):
-    """Client/server initialization shared by the sequential and SPMD
-    KD async executors — one definition, so the backends can never
-    drift on the bit-exact ``fold_in(key, ci)`` init streams (the same
-    streams the sync engines use)."""
-    fns = make_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 2)
-    lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base, targets,
-                              ranks[ci], fed.lora_alpha)
-           for ci in range(len(ranks))]
-    server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
-                                   targets, fed.lora_rank, fed.lora_alpha)
-    return SimpleNamespace(fns=fns, targets=targets, public=public,
-                           lts=lts, opts=[fns["opt_init"](lt) for lt in lts],
-                           server_lt=server_lt,
-                           server_opt=fns["opt_init"](server_lt),
-                           n_lora=[lora_lib.n_params(lt) for lt in lts])
-
-
-def make_split_state(model, base, cfg, fed, targets, clients_data,
-                     task: str, batch_size: int):
-    """Split-half initialization shared by the sequential and SPMD
-    Split async executors (same ``PRNGKey(seed + 3)`` stream as the
-    sync engines)."""
-    fns = make_fns(model, fed, task)
-    sfns = split_mod.make_split_fns(model, fed, task)
-    L = sfns["n_client_groups"]
-    key = jax.random.PRNGKey(fed.seed + 3)
-    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                 fed.lora_alpha)
-    c_global, s_lt = split_mod.split_lora(full_lt, L)
-    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
-    return SimpleNamespace(
-        fns=fns, sfns=sfns, targets=targets, c_global=c_global, s_lt=s_lt,
-        s_opt=sfns["opt_init"](s_lt), base_c=base_c, base_s=base_s,
-        frac_client=L / max(sfns["n_groups"], 1),
-        label_bytes=_label_bytes(clients_data, batch_size))
-
-
-def _seq_kd_exec(model, base, cfg, fed, targets, clients_data, public,
-                 task, batch_size, eval_batch, ranks):
-    ex = make_kd_state(model, base, fed, targets, ranks, public, task)
-    fns, lts, opts = ex.fns, ex.lts, ex.opts
-
-    def train_and_logits(cis, rnd):
-        out = []
-        for ci in cis:
-            lt, opt = lts[ci], opts[ci]
-            rng = _local_rng(fed, rnd, ci)
-            n_tok = 0
-            for ep in range(fed.local_epochs):
-                for batch in epoch_batches(clients_data[ci], batch_size,
-                                           seed=fed.seed * 991 + rnd + ep):
-                    rng, sub = jax.random.split(rng)
-                    jb = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-                    lt, opt, _ = fns["train_step"](base, lt, opt, jb, sub)
-                    n_tok += batch["tokens"].size
-            lts[ci], opts[ci] = lt, opt
-            out.append((kd_mod.client_logits(fns, base, lt, public,
-                                             eval_batch), n_tok))
-        return out
-
-    def distill(cis, glob, rnd):
-        for ci in cis:
-            lts[ci], opts[ci], _ = kd_mod.distill(
-                fns, base, lts[ci], opts[ci], public, glob, fed.kd_epochs,
-                eval_batch, seed=fed.seed + 31 * rnd + ci)
-
-    ex.train_and_logits, ex.distill = train_and_logits, distill
-    return ex
-
-
-# --------------------------------------------------------------------------- #
-# 3) Split-FedLLM async (payload: client-half adapters)
-# --------------------------------------------------------------------------- #
-def _drive_split(ex, base, cfg, fed, clients_data, test, eval_batch,
-                 verbose, ranks):
-    from repro.core.rounds import (FedResult, make_accountant,
-                                   round_epsilon)
-
-    n_clients = len(clients_data)
-    sched = ParticipationSchedule(n_clients, fed.seed + 17,
-                                  fed.max_staleness)
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    data_w = [len(d["tokens"]) for d in clients_data]
-    total_w = float(sum(data_w))
-    in_flight: Dict[int, _Job] = {}
-    c_global = ex.c_global
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-    releases = [0] * n_clients      # per-client c2 noise events
-
-    for rnd in range(fed.rounds):
-        # free clients run a split-training job NOW (the server half is
-        # in the activation loop, so it updates synchronously — every
-        # boundary activation is clipped + noised inside the step); only
-        # the cc1 client-half adapter upload goes in flight, masked
-        # against this round's starter cohort
-        starters = [ci for ci in range(n_clients) if ci not in in_flight]
-        secagg.begin_cohort(ledger, rnd, starters)
-        jobs = []
-        for ci in starters:
-            c_init = lora_lib.maybe_truncate_rank(c_global, ranks[ci],
-                                                  fed.lora_rank)
-            ledger.record(rnd, ci, "lora_params", M.DOWN,
-                          M.tree_bytes(c_init))                      # cc3
-            jobs.append((ci, c_init))
-        for (ci, _), (c_lt, n_tok, n_steps, shape) in zip(
-                jobs, ex.train(jobs, rnd)):
-            if n_steps:          # a sub-batch-size client trains 0 steps
-                up, down = ex.sfns["wire_bytes_per_batch"](shape)
-                lbl = ex.label_bytes
-                for _ in range(n_steps):
-                    ledger.record(rnd, ci, "activations", M.UP,
-                                  up + lbl)                            # c2
-                    ledger.record(rnd, ci, "act_grads", M.DOWN, down)  # c4
-                    if priv.dp_enabled:
-                        ledger.record(rnd, ci, "dp_meta", M.UP,
-                                      M.DP_META_BYTES)
-            releases[ci] += n_steps
-            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(c_lt),
-                               frac_layers=ex.frac_client)
-            secagg.collect(rnd, ci, c_lt)
-            in_flight[ci] = _Job(ci, rnd, rnd + sched.next_delay(ci), c_lt)
-        # arrivals: staleness-weighted FedAvg of the client halves (cc2)
-        arrivals, delivered = [], []
-        for j in _pop_arrivals(in_flight, rnd):
-            ledger.record(rnd, j.client, "lora_params", M.UP,
-                          M.tree_bytes(j.payload))                   # cc1
-            s = rnd - j.start
-            if s <= fed.max_staleness:
-                arrivals.append((j.client, j.payload, s, data_w[j.client]))
-                delivered.append((j.start, j.client))
-            else:
-                secagg.discard(j.start, j.client)
-        secagg.deliver(ledger, rnd, delivered)
-        if arrivals:
-            c_global = stale_weighted_avg(c_global, arrivals, total_w,
-                                          fed, ranks)
-        joined = split_mod.join_lora(c_global, ex.s_lt)
-        acc, loss = evaluate(ex.fns, base, joined, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, max(releases))))
-        if verbose:
-            print(f"[split/async] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f} arrived={len(arrivals)}")
-    return FedResult(history, ledger, joined, [c.flops for c in cost])
-
-
-def _seq_split_exec(model, base, cfg, fed, targets, clients_data, public,
-                    task, batch_size, eval_batch, ranks):
-    ex = make_split_state(model, base, cfg, fed, targets, clients_data,
-                          task, batch_size)
-    sfns, base_c, base_s = ex.sfns, ex.base_c, ex.base_s
-
-    def train(jobs, rnd):
-        out = []
-        for ci, c_init in jobs:
-            c_lt, c_opt = c_init, sfns["opt_init"](c_init)
-            rng = _local_rng(fed, rnd, ci)
-            n_tok, n_steps, shape = 0, 0, None
-            for batch in epoch_batches(clients_data[ci], batch_size,
-                                       seed=fed.seed * 983 + rnd):
-                rng, sub = jax.random.split(rng)
-                jb = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-                nkey = dp_mod.noise_key(fed, rnd, ci, n_steps) \
-                    if fed.privacy.dp_enabled else None
-                c_lt, ex.s_lt, c_opt, ex.s_opt, _ = \
-                    sfns["split_train_step"](base_c, base_s, c_lt, ex.s_lt,
-                                             c_opt, ex.s_opt, jb, sub, nkey)
-                n_tok += batch["tokens"].size
-                n_steps += 1
-                shape = batch["tokens"].shape
-            out.append((c_lt, n_tok, n_steps, shape))
-        return out
-
-    ex.train = train
-    return ex
-
-
-def _label_bytes(clients_data, batch_size: int) -> int:
-    """c2 piggybacks the labels with the boundary activations."""
-    return batch_size * 4 if "labels" in clients_data[0] else 0
+              backend: str = "sequential", mesh=None):
+    from repro.core import round_program
+    return round_program.run_program(model, base, cfg, fed, targets,
+                                     public, clients_data, test, task,
+                                     batch_size, eval_batch, verbose,
+                                     backend=backend, mesh=mesh)

@@ -286,7 +286,8 @@ def make_kd_spmd_fns(model: Model, fed: FedConfig,
 # 3) Split-FedLLM round (c1-c5 + cc1-cc4)
 # --------------------------------------------------------------------------- #
 def make_split_spmd_round(model: Model, fed: FedConfig,
-                          task: str = "classification", sfns=None):
+                          task: str = "classification", sfns=None,
+                          client_sharding=None):
     """One program for the whole Split-FedLLM round.
 
     Client-side LoRA halves are stacked on a leading client axis and the
@@ -305,6 +306,13 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
     mechanism when DP noise is active — the same per-(client, step)
     fold_in stream the sequential backend passes, so noise is
     bit-identical across backends.
+
+    ``client_sharding(ndim) -> NamedSharding`` (optional) pins the
+    stacked client-half axis to the mesh's client axes before the
+    closing cc2 reduction: the scan emits the per-client halves, the
+    constraint lays them out client-sharded, and the FedAvg lowers to a
+    cross-client all-reduce (launch/steps.py passes this for the
+    mesh-sharded dry-run).
     """
     from repro.core import split as split_mod
 
@@ -337,6 +345,10 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
         xs = (batches, keys, valid) + ((nkeys,) if noised else ())
         (s_lt, s_opt), (stacked_c, losses) = jax.lax.scan(
             per_client, (s_lt, s_opt), xs)
+        if client_sharding is not None:
+            stacked_c = jax.lax.with_sharding_constraint(
+                stacked_c,
+                jax.tree.map(lambda x: client_sharding(x.ndim), stacked_c))
         # cc2: FedAvg of the client halves — client-axis reduction
         new_c_global = weighted_client_mean(stacked_c, weights)
         return new_c_global, s_lt, s_opt, losses, stacked_c

@@ -22,6 +22,29 @@ from repro.core.fedavg import fedavg
 from repro.peft import lora as lora_lib
 
 
+def normalize_ranks(client_ranks, n_clients: int,
+                    lora_rank: int) -> List[int]:
+    """Single source of truth for per-client LoRA rank normalization:
+    an empty/None ``client_ranks`` means every client trains at the
+    global rank; otherwise the tuple must name every client exactly once
+    and stay within [1, lora_rank].  Every rank-dependent code path
+    (engines, bucketing, harmonization) starts from this list — the
+    degenerate configs (wrong length, all-equal ranks collapsing to one
+    bucket) are property-tested in tests/test_property.py."""
+    if not client_ranks:
+        return [lora_rank] * n_clients
+    if len(client_ranks) != n_clients:
+        raise ValueError(
+            f"client_ranks has {len(client_ranks)} entries for "
+            f"{n_clients} clients")
+    if any(r < 1 or r > lora_rank for r in client_ranks):
+        raise ValueError(
+            f"client_ranks must lie in [1, lora_rank={lora_rank}] "
+            f"(got {tuple(client_ranks)}); weak clients truncate the "
+            "global rank, they never exceed it")
+    return list(client_ranks)
+
+
 def aggregate_hetero(trees: List, ranks: Sequence[int], alpha: float,
                      global_rank: int, weights=None, method: str = "zeropad"):
     if method == "zeropad":

@@ -1,0 +1,814 @@
+"""The composable federated round pipeline — ONE driver for every
+engine combination the paper's comparison needs:
+
+    framework     x   backend      x   aggregation   (+ privacy, hetero)
+    fedllm/kd/split   sequential/spmd  sync/async
+
+One federated round decomposes into the paper's canonical stages
+
+    broadcast -> local_update -> upload -> aggregate -> evaluate
+
+and the combination axes are orthogonal pieces composed by
+``run_program``:
+
+- A **FrameworkProgram** (FedLLM / KD / Split) contributes the stage
+  bodies: what a client computes, what crosses the wire (payload +
+  shape-derived bytes), and how the server fuses arrivals.  The same
+  stage-specs hand the launch layer its jittable round programs
+  (``FrameworkProgram.spmd_round`` — launch/steps.py builds the
+  ``fed_round`` dry-run artifacts from them).
+- An **Executor** decides how per-client work runs.  ``sequential``
+  loops clients (the paper-literal reference); ``spmd`` stacks the
+  round's ready-set on a leading client axis and runs one jitted
+  program per rank bucket (contiguous equal-rank segments for Split,
+  whose shared server half scans clients in visit order).  Given a
+  mesh, the SPMD executor places the stacked client axis on the mesh's
+  client axes with explicit NamedShardings (launch/sharding.py) — the
+  client dimension of a real run shards over the pod/data axes, not
+  just in the dry-run.
+- A **Schedule** decides when uploads arrive: ``SyncSchedule`` delivers
+  in the start round; ``AsyncSchedule`` wraps the seeded
+  ``ParticipationSchedule`` delay model (core/async_agg.py) and the
+  aggregate stage folds arrivals in staleness-weighted.
+  ``max_staleness == 0`` collapses async onto sync exactly.
+- **Privacy is middleware at fixed seams**: per-example DP-SGD clipping
+  lives inside the shared train step (core/fedavg.py), payload noise is
+  applied at the upload boundary from the dedicated fold_in stream
+  (privacy/dp.py), and secure aggregation masks at upload / verifies
+  cancellation at aggregate — uniformly, with zero per-driver
+  threading.
+
+Ledger bytes are derived from payload shapes on the host, so they are
+per-simulated-client and backend-independent by construction
+(tests/test_backend_parity.py pins the full engine matrix).
+
+Adding a framework is one FrameworkProgram subclass; adding a
+cross-cutting feature is one stage hook or middleware — not an edit to
+O(frameworks x backends x aggregation) hand-written drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, ModelConfig
+from repro.core import fed_spmd
+from repro.core import kd as kd_mod
+from repro.core import metrics as M
+from repro.core import rng as rng_mod
+from repro.core import split as split_mod
+from repro.core.fedavg import evaluate, make_fns
+from repro.core.heterogeneous import normalize_ranks
+from repro.data.loader import epoch_batches
+from repro.peft import lora as lora_lib
+from repro.privacy import dp as dp_mod
+from repro.privacy.secure_agg import SecureAggSession
+
+
+@dataclasses.dataclass
+class FedResult:
+    history: List[M.RoundMetrics]
+    ledger: M.CommLedger
+    final_lora: Dict
+    client_flops: List[float]
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.history[-1].accuracy if self.history else 0.0
+
+
+def _to_jax(batch):
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+# --------------------------------------------------------------------------- #
+# Privacy accounting (RDP accountant wiring)
+# --------------------------------------------------------------------------- #
+def make_accountant(fed: FedConfig, sample_rate: float = 1.0):
+    """RDP accountant for the run, or None when DP is off entirely.
+
+    ``sample_rate`` is the per-step subsampling rate q the engines
+    report (batch_size / |local data|, worst case over clients) — the
+    accountant applies subsampling amplification when q < 1.  A
+    clipping-only run (dp_clip > 0, noise 0) gets an accountant whose
+    epsilon is ``inf`` — the mechanism is active but offers no
+    (eps, delta) guarantee, and reporting 0.0 would claim the strongest
+    one instead."""
+    if not fed.privacy.dp_enabled:
+        return None
+    from repro.privacy.accountant import GaussianAccountant
+    return GaussianAccountant(fed.privacy.dp_noise_multiplier,
+                              fed.privacy.dp_delta,
+                              sample_rate=sample_rate)
+
+
+def round_epsilon(acct, releases: int) -> float:
+    """eps at the configured dp_delta after ``releases`` noisy uploads
+    per client; 0.0 when DP is not enabled (no accounting, no claim),
+    inf when clipping runs without noise."""
+    return acct.epsilon(releases) if acct is not None else 0.0
+
+
+def sample_rate(clients_data: List[Dict], batch_size: int) -> float:
+    """Worst-case (largest) per-step subsampling rate over clients:
+    q_i = batch_size / |client i's data|, clamped to 1."""
+    return max(min(1.0, batch_size / max(len(d["tokens"]), 1))
+               for d in clients_data)
+
+
+# --------------------------------------------------------------------------- #
+# Round context: everything the stages share
+# --------------------------------------------------------------------------- #
+class RoundContext:
+    """Run-wide state threaded through every stage: config, data, the
+    shared jitted steps, the metrics ledger/cost model, and the privacy
+    middleware (accountant + secure-agg session + per-client release
+    counters)."""
+
+    def __init__(self, model, base, cfg: ModelConfig, fed: FedConfig,
+                 targets, public, clients_data, test, task, batch_size,
+                 eval_batch, verbose):
+        self.model, self.base, self.cfg, self.fed = model, base, cfg, fed
+        self.targets, self.public, self.test = targets, public, test
+        self.clients_data, self.task = clients_data, task
+        self.batch_size, self.eval_batch = batch_size, eval_batch
+        self.verbose = verbose
+        self.n_clients = len(clients_data)
+        self.fns = make_fns(model, fed, task)
+        self.ranks = normalize_ranks(fed.client_ranks, self.n_clients,
+                                     fed.lora_rank)
+        self.ledger = M.CommLedger()
+        self.history: List[M.RoundMetrics] = []
+        self.cost = [M.ClientCost() for _ in range(self.n_clients)]
+        self.data_w = [len(d["tokens"]) for d in clients_data]
+        self.total_w = float(sum(self.data_w))
+        self.acct = make_accountant(fed, sample_rate(clients_data,
+                                                     batch_size))
+        self.secagg = SecureAggSession(fed)
+        self.releases = [0] * self.n_clients   # noisy uploads per client
+
+
+# --------------------------------------------------------------------------- #
+# Schedules: when does an upload arrive at the server?
+# --------------------------------------------------------------------------- #
+class SyncSchedule:
+    """The paper-literal parameter-server round: every client starts a
+    job each round and its upload arrives the same round."""
+
+    def __init__(self, fed: FedConfig, n_clients: int):
+        self.n = n_clients
+        self._pending = []
+
+    def starters(self, rnd: int) -> List[int]:
+        return list(range(self.n))
+
+    def submit(self, rnd: int, ci: int, payload):
+        from repro.core.async_agg import _Job
+        self._pending.append(_Job(ci, rnd, rnd, payload))
+
+    def pop_arrivals(self, rnd: int):
+        out = sorted((j for j in self._pending if j.arrival == rnd),
+                     key=lambda j: j.client)
+        self._pending = [j for j in self._pending if j.arrival != rnd]
+        return out
+
+
+class AsyncSchedule:
+    """FedAsync-style participation: a free client starts a job (pulls
+    the current global, trains NOW) and the upload goes in flight for a
+    seeded per-job delay (core/async_agg.ParticipationSchedule)."""
+
+    def __init__(self, fed: FedConfig, n_clients: int):
+        from repro.core.async_agg import ParticipationSchedule
+        self.n = n_clients
+        self.sched = ParticipationSchedule(n_clients, fed.seed + 17,
+                                           fed.max_staleness)
+        self.in_flight: Dict[int, object] = {}
+
+    def starters(self, rnd: int) -> List[int]:
+        return [ci for ci in range(self.n) if ci not in self.in_flight]
+
+    def submit(self, rnd: int, ci: int, payload):
+        from repro.core.async_agg import _Job
+        self.in_flight[ci] = _Job(ci, rnd, rnd + self.sched.next_delay(ci),
+                                  payload)
+
+    def pop_arrivals(self, rnd: int):
+        from repro.core.async_agg import _pop_arrivals
+        return _pop_arrivals(self.in_flight, rnd)
+
+
+def make_schedule(fed: FedConfig, n_clients: int):
+    return (SyncSchedule if fed.aggregation == "sync"
+            else AsyncSchedule)(fed, n_clients)
+
+
+# --------------------------------------------------------------------------- #
+# Executors: how per-client work runs
+# --------------------------------------------------------------------------- #
+class SequentialExecutor:
+    """Python loop over clients, one jitted step per batch — the
+    paper-literal reference and the numerical ground truth."""
+
+    backend = "sequential"
+
+    def __init__(self, ctx: RoundContext, mesh=None):
+        self.ctx = ctx                      # mesh ignored: nothing stacked
+
+    # -- shared local fine-tune body (FedLLM a2 / KD b1) ----------------- #
+    def _local_finetune(self, program, ci, lt, opt, rnd):
+        """One client's epochs of jitted train steps; returns
+        (lt, opt, n_tok).  The single loop both the FedLLM and KD
+        stages call, so a change to the local update (seed formula,
+        privacy hook, ...) can never apply to one framework only."""
+        ctx, fed, fns = self.ctx, self.ctx.fed, self.ctx.fns
+        r = rng_mod.local_rng(fed, rnd, ci)
+        n_tok = 0
+        for ep in range(fed.local_epochs):
+            for batch in epoch_batches(
+                    ctx.clients_data[ci], ctx.batch_size,
+                    seed=fed.seed * program.epoch_seed_mult + rnd + ep):
+                r, sub = jax.random.split(r)
+                lt, opt, _ = fns["train_step"](ctx.base, lt, opt,
+                                               _to_jax(batch), sub)
+                n_tok += batch["tokens"].size
+        return lt, opt, n_tok
+
+    # -- FedLLM a2 ------------------------------------------------------ #
+    def train(self, program, jobs, rnd):
+        """jobs: [(ci, lt)] -> [(new_lt, n_tok)] in job order."""
+        out = []
+        for ci, lt in jobs:
+            lt, _, n_tok = self._local_finetune(
+                program, ci, lt, self.ctx.fns["opt_init"](lt), rnd)
+            out.append((lt, n_tok))
+        return out
+
+    # -- KD b1 + b2 ----------------------------------------------------- #
+    def kd_train_and_logits(self, program, cis, rnd):
+        ctx = self.ctx
+        out = []
+        for ci in cis:
+            lt, opt, n_tok = self._local_finetune(
+                program, ci, program.lts[ci], program.opts[ci], rnd)
+            program.lts[ci], program.opts[ci] = lt, opt
+            out.append((kd_mod.client_logits(ctx.fns, ctx.base, lt,
+                                             ctx.public, ctx.eval_batch),
+                        n_tok))
+        return out
+
+    # -- KD b8 ---------------------------------------------------------- #
+    def kd_distill(self, program, cis, glob, rnd):
+        ctx, fed = self.ctx, self.ctx.fed
+        for ci in cis:
+            program.lts[ci], program.opts[ci], _ = kd_mod.distill(
+                ctx.fns, ctx.base, program.lts[ci], program.opts[ci],
+                ctx.public, glob, fed.kd_epochs, ctx.eval_batch,
+                seed=fed.seed + 31 * rnd + ci)
+
+    # -- Split c1-c5 (server half threads through in visit order) ------- #
+    def split_train(self, program, jobs, rnd):
+        """jobs: [(ci, c_init)] -> [(c_lt, n_tok, n_steps, shape)]."""
+        ctx, fed = self.ctx, self.ctx.fed
+        sfns = program.sfns
+        out = []
+        for ci, c_init in jobs:
+            c_lt, c_opt = c_init, sfns["opt_init"](c_init)
+            r = rng_mod.local_rng(fed, rnd, ci)
+            n_tok, n_steps, shape = 0, 0, None
+            for batch in epoch_batches(
+                    ctx.clients_data[ci], ctx.batch_size,
+                    seed=fed.seed * program.epoch_seed_mult + rnd):
+                r, sub = jax.random.split(r)
+                nkey = dp_mod.noise_key(fed, rnd, ci, n_steps) \
+                    if fed.privacy.dp_enabled else None
+                c_lt, program.s_lt, c_opt, program.s_opt, _ = \
+                    sfns["split_train_step"](
+                        program.base_c, program.base_s, c_lt, program.s_lt,
+                        c_opt, program.s_opt, _to_jax(batch), sub, nkey)
+                n_tok += batch["tokens"].size
+                n_steps += 1
+                shape = batch["tokens"].shape
+            out.append((c_lt, n_tok, n_steps, shape))
+        return out
+
+
+class SpmdExecutor:
+    """Ready-set stacked on a leading client axis, one jitted program
+    per rank bucket (``fed_spmd``).  Split fuses only contiguous
+    equal-rank runs (``rank_segments``) so the shared server half keeps
+    the paper's client visit order.  With ``mesh`` set, stacked inputs
+    are placed with explicit client-axis NamedShardings
+    (launch/sharding.py) so the client dimension shards over the mesh's
+    pod/data axes in a real run."""
+
+    backend = "spmd"
+
+    def __init__(self, ctx: RoundContext, mesh=None):
+        self.ctx = ctx
+        self.mesh = mesh
+        self._bucket_update = None
+        self._kfns = None
+        self._seg_step = None
+
+    # -- mesh placement of the stacked client axis ---------------------- #
+    def _shard(self, *trees):
+        if self.mesh is None:
+            return trees if len(trees) > 1 else trees[0]
+        from repro.launch.sharding import shard_client_tree
+        out = tuple(shard_client_tree(self.mesh, t) for t in trees)
+        return out if len(out) > 1 else out[0]
+
+    # -- FedLLM a2 ------------------------------------------------------ #
+    def train(self, program, jobs, rnd):
+        ctx, fed, fns = self.ctx, self.ctx.fed, self.ctx.fns
+        if self._bucket_update is None:
+            self._bucket_update = fed_spmd.make_bucket_update(
+                ctx.model, fed, ctx.task)
+        by_ci = dict(jobs)
+        seeds = [fed.seed * program.epoch_seed_mult + rnd + ep
+                 for ep in range(fed.local_epochs)]
+        results = {}
+        for rank, cis in fed_spmd.rank_buckets(ctx.ranks, list(by_ci)):
+            stacked_lt = fed_spmd.stack_trees([by_ci[ci] for ci in cis])
+            stacked_opt = fed_spmd.stack_for_clients(
+                fns["opt_init"](by_ci[cis[0]]), len(cis))
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [ctx.clients_data[ci] for ci in cis], ctx.batch_size, seeds)
+            keys = rng_mod.grid_keys(fed, rnd, cis, valid.shape[1])
+            stacked_lt, stacked_opt, batches, keys = self._shard(
+                stacked_lt, stacked_opt, batches, keys)
+            new_lt, _, _ = self._bucket_update(ctx.base, stacked_lt,
+                                               stacked_opt, batches, keys,
+                                               jnp.asarray(valid))
+            for k, (ci, t) in enumerate(
+                    zip(cis, fed_spmd.unstack_tree(new_lt))):
+                results[ci] = (t, n_tok[k])
+        return [results[ci] for ci, _ in jobs]
+
+    # -- KD b1 + b2 ----------------------------------------------------- #
+    def kd_train_and_logits(self, program, cis, rnd):
+        ctx, fed = self.ctx, self.ctx.fed
+        if self._kfns is None:
+            self._kfns = fed_spmd.make_kd_spmd_fns(ctx.model, fed, ctx.task)
+        kfns, lts, opts = self._kfns, program.lts, program.opts
+        seeds = [fed.seed * program.epoch_seed_mult + rnd + ep
+                 for ep in range(fed.local_epochs)]
+        results = {}
+        for rank, bcis in fed_spmd.rank_buckets(ctx.ranks, cis):
+            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
+            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [ctx.clients_data[ci] for ci in bcis], ctx.batch_size,
+                seeds)
+            keys = rng_mod.grid_keys(fed, rnd, bcis, valid.shape[1])
+            sl, so, batches, keys = self._shard(sl, so, batches, keys)
+            sl, so, _ = kfns["client_update"](ctx.base, sl, so, batches,
+                                              keys, jnp.asarray(valid))
+            logits = _batched_public_logits(kfns, ctx.base, sl, ctx.public,
+                                            ctx.eval_batch)
+            for k, (ci, lt, opt) in enumerate(zip(
+                    bcis, fed_spmd.unstack_tree(sl),
+                    fed_spmd.unstack_tree(so))):
+                lts[ci], opts[ci] = lt, opt
+                results[ci] = (logits[k], n_tok[k])
+        return [results[ci] for ci in cis]
+
+    # -- KD b8 ---------------------------------------------------------- #
+    def kd_distill(self, program, cis, glob, rnd):
+        ctx, fed = self.ctx, self.ctx.fed
+        kfns, lts, opts = self._kfns, program.lts, program.opts
+        for rank, bcis in fed_spmd.rank_buckets(ctx.ranks, cis):
+            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
+            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
+            sl, so = self._shard(sl, so)
+            sl, so = _batched_distill(kfns, ctx.base, sl, so, ctx.public,
+                                      glob, fed, ctx.eval_batch, rnd, bcis)
+            for ci, lt, opt in zip(bcis, fed_spmd.unstack_tree(sl),
+                                   fed_spmd.unstack_tree(so)):
+                lts[ci], opts[ci] = lt, opt
+
+    # -- Split segments (server carry threads segment-after-segment) ---- #
+    def split_train(self, program, jobs, rnd):
+        ctx, fed = self.ctx, self.ctx.fed
+        if self._seg_step is None:
+            self._seg_step = jax.jit(fed_spmd.make_split_spmd_segment(
+                ctx.model, fed, ctx.task, sfns=program.sfns))
+        by_ci = dict(jobs)
+        noised = fed.privacy.noise_std > 0.0
+        results = {}
+        # NOTE: the client axis of a split segment is *scanned* (shared
+        # server carry), so it is never mesh-sharded — only the batch
+        # dims inside a step shard (see SplitProgram.spmd_round for the
+        # client-sharded cc2 reduction in the launch artifact).
+        for rank, cis in fed_spmd.rank_segments(ctx.ranks, list(by_ci)):
+            batches, valid, n_tok = fed_spmd.stack_client_batches(
+                [ctx.clients_data[ci] for ci in cis], ctx.batch_size,
+                [fed.seed * program.epoch_seed_mult + rnd])
+            keys = rng_mod.grid_keys(fed, rnd, cis, valid.shape[1])
+            extra = (dp_mod.noise_key_grid(fed, rnd, cis,
+                                           valid.shape[1]),) if noised \
+                else ()
+            stacked_c, program.s_lt, program.s_opt, _ = self._seg_step(
+                program.base_c, program.base_s, by_ci[cis[0]],
+                program.s_lt, program.s_opt, batches, keys,
+                jnp.asarray(valid), *extra)
+            shape = tuple(batches["tokens"].shape[-2:])
+            for k, (ci, t) in enumerate(
+                    zip(cis, fed_spmd.unstack_tree(stacked_c))):
+                results[ci] = (t, n_tok[k], int(valid[k].sum()), shape)
+        return [results[ci] for ci, _ in jobs]
+
+
+def _batched_public_logits(kfns, base, stacked_lt, public, batch_size):
+    """b2/b6 for every client at once — same batch order and original-
+    row-order scatter as kd.client_logits, giving (C, N, D) with row i
+    holding public sample i's logits."""
+    outs = []
+    for batch in epoch_batches(public, batch_size, seed=0,
+                               drop_remainder=False):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        outs.append(kfns["batched_logits"](base, stacked_lt, jb))
+    stacked = jnp.concatenate(outs, axis=1)
+    perm = jnp.asarray(kd_mod._epoch_perm(len(public["tokens"]), 0))
+    return jnp.zeros_like(stacked).at[:, perm].set(stacked)
+
+
+def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
+                     fed, batch_size, rnd, client_ids):
+    """b8 for every client in a (bucket-)stack at once; per-client RNG
+    streams match the sequential executor's PRNGKey(seed + 31r + ci)."""
+    rngs = jnp.stack([jax.random.PRNGKey(fed.seed + 31 * rnd + ci)
+                      for ci in client_ids])
+    n = len(public["tokens"])
+    for ep in range(fed.kd_epochs):
+        perm = kd_mod._epoch_perm(n, ep)
+        start = 0
+        for batch in epoch_batches(public, batch_size, seed=ep,
+                                   drop_remainder=False):
+            sel = perm[start:start + len(batch["tokens"])]
+            start += len(batch["tokens"])
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            t = jnp.asarray(teacher[sel])
+            rngs, subs = fed_spmd.split_each(rngs)
+            stacked_lt, stacked_opt, _ = kfns["batched_kd_step"](
+                base, stacked_lt, stacked_opt, jb, t, subs)
+    return stacked_lt, stacked_opt
+
+
+EXECUTORS = {"sequential": SequentialExecutor, "spmd": SpmdExecutor}
+
+
+# --------------------------------------------------------------------------- #
+# Framework stage-specs
+# --------------------------------------------------------------------------- #
+class FedLLMProgram:
+    """FedLLMs (paper SSII.A): a1 broadcast global LoRA params, a2 local
+    PEFT fine-tuning, a3 upload the tuned params, a4 FedAvg."""
+
+    name = "fedllm"
+    epoch_seed_mult = 997
+
+    def __init__(self, ctx: RoundContext):
+        key = jax.random.PRNGKey(ctx.fed.seed + 1)
+        self.global_lt = lora_lib.init_lora(key, ctx.base, ctx.targets,
+                                            ctx.fed.lora_rank,
+                                            ctx.fed.lora_alpha)
+
+    def broadcast(self, ctx, cohort, rnd):
+        jobs = []
+        for ci in cohort:
+            lt = lora_lib.maybe_truncate_rank(self.global_lt, ctx.ranks[ci],
+                                              ctx.fed.lora_rank)
+            ctx.ledger.record(rnd, ci, "lora_params", M.DOWN,
+                              M.tree_bytes(lt))
+            jobs.append((ci, lt))
+        return jobs
+
+    def local_update(self, ctx, ex, jobs, rnd):
+        outs = ex.train(self, jobs, rnd)
+        for (ci, _), (new_lt, n_tok) in zip(jobs, outs):
+            ctx.cost[ci].add_train(ctx.cfg, n_tok,
+                                   lora_lib.n_params(new_lt))
+        return [(ci, new_lt)
+                for (ci, _), (new_lt, _) in zip(jobs, outs)]
+
+    def upload(self, ctx, outs, rnd):
+        payloads = []
+        for ci, lt in outs:
+            lt = dp_mod.privatize_tree(lt, dp_mod.noise_key(ctx.fed, rnd,
+                                                            ci),
+                                       ctx.fed.privacy.noise_std)
+            ctx.secagg.collect(rnd, ci, lt)
+            ctx.releases[ci] += 1
+            payloads.append((ci, lt))
+        return payloads
+
+    def record_arrival(self, ctx, job, rnd):
+        ctx.ledger.record(rnd, job.client, "lora_params", M.UP,
+                          M.tree_bytes(job.payload))
+        if ctx.fed.privacy.dp_enabled:
+            ctx.ledger.record(rnd, job.client, "dp_meta", M.UP,
+                              M.DP_META_BYTES)
+
+    def aggregate(self, ctx, ex, kept, arrived, rnd):
+        from repro.core.async_agg import stale_weighted_avg
+        if kept:
+            self.global_lt = stale_weighted_avg(self.global_lt, kept,
+                                                ctx.total_w, ctx.fed,
+                                                ctx.ranks)
+
+    def evaluate(self, ctx):
+        return evaluate(ctx.fns, ctx.base, self.global_lt, ctx.test,
+                        ctx.eval_batch)
+
+    def final_state(self, ctx):
+        return self.global_lt
+
+    @staticmethod
+    def spmd_round(model, fed: FedConfig, task: str = "classification"):
+        """The jittable whole-round program for the launch layer: the
+        vmapped local scans plus the client-axis FedAvg all-reduce."""
+        return fed_spmd.make_spmd_round(model, fed, task)
+
+
+class KDProgram:
+    """KD-FedLLMs (paper SSII.B): params never cross the wire — clients
+    upload public-set logits (b3), the server fuses knowledge (b4),
+    distills (b5), and re-broadcasts global knowledge (b6-b8)."""
+
+    name = "kd"
+    epoch_seed_mult = 991
+
+    def __init__(self, ctx: RoundContext):
+        fed = ctx.fed
+        key = jax.random.PRNGKey(fed.seed + 2)
+        self.lts = [lora_lib.init_lora(jax.random.fold_in(key, ci),
+                                       ctx.base, ctx.targets, ctx.ranks[ci],
+                                       fed.lora_alpha)
+                    for ci in range(ctx.n_clients)]
+        self.opts = [ctx.fns["opt_init"](lt) for lt in self.lts]
+        self.server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999),
+                                            ctx.base, ctx.targets,
+                                            fed.lora_rank, fed.lora_alpha)
+        self.server_opt = ctx.fns["opt_init"](self.server_lt)
+        self.n_lora = [lora_lib.n_params(lt) for lt in self.lts]
+        self.glob = None            # latest global knowledge (b6)
+        self.pub_tok = ctx.public["tokens"].size
+
+    def broadcast(self, ctx, cohort, rnd):
+        return list(cohort)         # no param download in KD
+
+    def local_update(self, ctx, ex, jobs, rnd):
+        outs = ex.kd_train_and_logits(self, jobs, rnd)
+        for ci, (_, n_tok) in zip(jobs, outs):
+            ctx.cost[ci].add_train(ctx.cfg, n_tok, self.n_lora[ci])
+            ctx.cost[ci].add_fwd(ctx.cfg, self.pub_tok)
+        return [(ci, logits) for ci, (logits, _) in zip(jobs, outs)]
+
+    def upload(self, ctx, outs, rnd):
+        payloads = []
+        for ci, logits in outs:
+            logits = dp_mod.privatize_logits(
+                logits, dp_mod.noise_key(ctx.fed, rnd, ci), ctx.fed)
+            lg, wire = kd_mod.compress_for_wire(logits, ctx.fed)
+            ctx.secagg.collect(rnd, ci, lg)
+            ctx.releases[ci] += 1
+            payloads.append((ci, (lg, wire)))
+        return payloads
+
+    def record_arrival(self, ctx, job, rnd):
+        ctx.ledger.record(rnd, job.client, "logits", M.UP, job.payload[1])
+        if ctx.fed.privacy.dp_enabled:
+            ctx.ledger.record(rnd, job.client, "dp_meta", M.UP,
+                              M.DP_META_BYTES)
+
+    def aggregate(self, ctx, ex, kept, arrived, rnd):
+        from repro.core.async_agg import staleness_weight
+        fed = ctx.fed
+        if kept:
+            ws = [w * staleness_weight(s, fed.staleness_decay)
+                  for _, _, s, w in kept]
+            teacher = kd_mod.aggregate_knowledge(
+                [p[0] for _, p, _, _ in kept], ws)
+            self.server_lt, self.server_opt, _ = kd_mod.distill(
+                ctx.fns, ctx.base, self.server_lt, self.server_opt,
+                ctx.public, teacher, fed.kd_epochs, ctx.eval_batch,
+                seed=fed.seed + rnd)
+            self.glob = kd_mod.client_logits(ctx.fns, ctx.base,
+                                             self.server_lt, ctx.public,
+                                             ctx.eval_batch)
+        # b6-b8: delivering clients re-sync against the latest knowledge
+        if arrived and self.glob is not None:
+            glob_wire = kd_mod.logit_wire_bytes(self.glob.shape, fed)
+            cis = [j.client for j in arrived]
+            for ci in cis:
+                ctx.ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
+                ctx.cost[ci].add_train(ctx.cfg, self.pub_tok * fed.kd_epochs,
+                                       self.n_lora[ci])
+            ex.kd_distill(self, cis, self.glob, rnd)
+
+    def evaluate(self, ctx):
+        return evaluate(ctx.fns, ctx.base, self.server_lt, ctx.test,
+                        ctx.eval_batch)
+
+    def final_state(self, ctx):
+        return self.server_lt
+
+    @staticmethod
+    def spmd_round(model, fed: FedConfig, task: str = "classification"):
+        """The jittable whole-round program for the launch layer:
+        vmapped b1 local update, batched b2 public logits (with the b3
+        privacy mechanism when configured), b4 client-axis knowledge
+        reduction, b5 server distillation, b6 global logits and vmapped
+        b8 client distillation — one program."""
+        fns = make_fns(model, fed, task)
+        local_update = fed_spmd.make_local_update(model, fed, task)
+        noised = fed.privacy.noise_std > 0.0
+
+        def kd_round_core(base, slt, sopt, server_lt, server_opt, batches,
+                          keys, valid, weights, public_batch, client_keys,
+                          server_key, noise_keys=None):
+            slt, sopt, _ = jax.vmap(
+                local_update, in_axes=(None, 0, 0, 0, 0, 0))(
+                    base, slt, sopt, batches, keys, valid)
+            logits = jax.vmap(fns["logits_fn"], in_axes=(None, 0, None))(
+                base, slt, public_batch)                   # (C, Bp, D)
+            if fed.privacy.dp_enabled:
+                # b3 mechanism: per-client row-clipped noisy knowledge
+                if noised:
+                    logits = jax.vmap(
+                        lambda lg, k: dp_mod.privatize_rows(lg, k, fed))(
+                            logits, noise_keys)
+                else:
+                    logits = dp_mod.privatize_rows(logits, None, fed)
+            teacher = kd_mod.aggregate_knowledge_batched(logits, weights)
+            server_lt, server_opt, _ = fns["kd_step"](
+                base, server_lt, server_opt, public_batch, teacher,
+                server_key)
+            glob = fns["logits_fn"](base, server_lt, public_batch)
+            slt, sopt, _ = jax.vmap(
+                fns["kd_step"], in_axes=(None, 0, 0, None, None, 0))(
+                    base, slt, sopt, public_batch, glob, client_keys)
+            return slt, sopt, server_lt, server_opt
+
+        return kd_round_core
+
+
+class SplitProgram:
+    """Split-FedLLMs (paper SSII.C): c1-c5 split training (activations
+    up, gradients down, server half in the loop) plus the cc1-cc4
+    FedAvg of the *client-side* adapters."""
+
+    name = "split"
+    epoch_seed_mult = 983
+
+    def __init__(self, ctx: RoundContext):
+        fed, cfg = ctx.fed, ctx.cfg
+        self.sfns = split_mod.make_split_fns(ctx.model, fed, ctx.task)
+        L = self.sfns["n_client_groups"]
+        key = jax.random.PRNGKey(fed.seed + 3)
+        full_lt = lora_lib.init_lora(key, ctx.base, ctx.targets,
+                                     fed.lora_rank, fed.lora_alpha)
+        self.c_global, self.s_lt = split_mod.split_lora(full_lt, L)
+        self.base_c, self.base_s = split_mod.split_base(
+            ctx.base, L, cfg.is_encoder_decoder)
+        self.s_opt = self.sfns["opt_init"](self.s_lt)
+        self.frac_client = L / max(self.sfns["n_groups"], 1)
+        self.label_bytes = ctx.batch_size * 4 \
+            if "labels" in ctx.clients_data[0] else 0
+        self.joined = full_lt
+
+    def broadcast(self, ctx, cohort, rnd):
+        jobs = []
+        for ci in cohort:
+            c_init = lora_lib.maybe_truncate_rank(
+                self.c_global, ctx.ranks[ci], ctx.fed.lora_rank)
+            ctx.ledger.record(rnd, ci, "lora_params", M.DOWN,
+                              M.tree_bytes(c_init))                    # cc3
+            jobs.append((ci, c_init))
+        return jobs
+
+    def local_update(self, ctx, ex, jobs, rnd):
+        outs = ex.split_train(self, jobs, rnd)
+        priv = ctx.fed.privacy
+        res = []
+        for (ci, _), (c_lt, n_tok, n_steps, shape) in zip(jobs, outs):
+            if n_steps:          # a sub-batch-size client trains 0 steps
+                up, down = self.sfns["wire_bytes_per_batch"](shape)
+                for _ in range(n_steps):
+                    ctx.ledger.record(rnd, ci, "activations", M.UP,
+                                      up + self.label_bytes)           # c2
+                    ctx.ledger.record(rnd, ci, "act_grads", M.DOWN,
+                                      down)                            # c4
+                    if priv.dp_enabled:
+                        ctx.ledger.record(rnd, ci, "dp_meta", M.UP,
+                                          M.DP_META_BYTES)
+            ctx.releases[ci] += n_steps     # per-client c2 noise events
+            ctx.cost[ci].add_train(ctx.cfg, n_tok,
+                                   lora_lib.n_params(c_lt),
+                                   frac_layers=self.frac_client)
+            res.append((ci, c_lt))
+        return res
+
+    def upload(self, ctx, outs, rnd):
+        # the c2 activation noise is Split's DP mechanism (inside the
+        # step); the cc1 adapter upload is masked but not noised
+        for ci, c_lt in outs:
+            ctx.secagg.collect(rnd, ci, c_lt)
+        return outs
+
+    def record_arrival(self, ctx, job, rnd):
+        ctx.ledger.record(rnd, job.client, "lora_params", M.UP,
+                          M.tree_bytes(job.payload))                   # cc1
+
+    def aggregate(self, ctx, ex, kept, arrived, rnd):
+        from repro.core.async_agg import stale_weighted_avg
+        if kept:                                                       # cc2
+            self.c_global = stale_weighted_avg(self.c_global, kept,
+                                               ctx.total_w, ctx.fed,
+                                               ctx.ranks)
+        self.joined = split_mod.join_lora(self.c_global, self.s_lt)
+
+    def evaluate(self, ctx):
+        return evaluate(ctx.fns, ctx.base, self.joined, ctx.test,
+                        ctx.eval_batch)
+
+    def final_state(self, ctx):
+        return self.joined
+
+    @staticmethod
+    def spmd_round(model, fed: FedConfig, task: str = "generative",
+                   sfns=None, client_sharding=None):
+        """The jittable whole-round program for the launch layer;
+        ``client_sharding(ndim) -> NamedSharding`` pins the stacked
+        client-half axis to the mesh's client axes before the closing
+        cc2 reduction."""
+        return fed_spmd.make_split_spmd_round(
+            model, fed, task, sfns=sfns, client_sharding=client_sharding)
+
+
+PROGRAMS = {"fedllm": FedLLMProgram, "kd": KDProgram,
+            "split": SplitProgram}
+
+
+# --------------------------------------------------------------------------- #
+# The driver: one loop for every engine combination
+# --------------------------------------------------------------------------- #
+def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
+                public: Dict, clients_data: List[Dict], test: Dict,
+                task: str, batch_size: int, eval_batch: int,
+                verbose: bool, backend: str = "sequential",
+                mesh=None) -> FedResult:
+    """Run ``fed.rounds`` federated rounds of ``fed.framework`` through
+    the composed pipeline.  ``backend`` selects the executor; ``mesh``
+    (optional) makes the SPMD executor shard the stacked client axis
+    over the mesh's client axes."""
+    ctx = RoundContext(model, base, cfg, fed, targets, public,
+                       clients_data, test, task, batch_size, eval_batch,
+                       verbose)
+    program = PROGRAMS[fed.framework](ctx)
+    ex = EXECUTORS[backend](ctx, mesh)
+    schedule = make_schedule(fed, ctx.n_clients)
+    tag = f"{fed.framework}/{backend}" + \
+        ("/async" if fed.aggregation == "async" else "")
+
+    for rnd in range(fed.rounds):
+        # start cohort: free clients pull state and form this round's
+        # secure-agg masking cohort (payloads are created — and masked —
+        # now, even when they deliver rounds later)
+        starters = schedule.starters(rnd)
+        ctx.secagg.begin_cohort(ctx.ledger, rnd, starters)
+        jobs = program.broadcast(ctx, starters, rnd)
+        outs = program.local_update(ctx, ex, jobs, rnd)
+        for ci, payload in program.upload(ctx, outs, rnd):
+            schedule.submit(rnd, ci, payload)
+        # arrivals: record wire traffic, drop too-stale updates (their
+        # pairwise masks recovered like any absent cohort member's)
+        kept, delivered, arrived = [], [], []
+        for j in schedule.pop_arrivals(rnd):
+            arrived.append(j)
+            program.record_arrival(ctx, j, rnd)
+            s = rnd - j.start
+            if s <= fed.max_staleness:
+                kept.append((j.client, j.payload, s, ctx.data_w[j.client]))
+                delivered.append((j.start, j.client))
+            else:
+                ctx.secagg.discard(j.start, j.client)
+        ctx.secagg.deliver(ctx.ledger, rnd, delivered)
+        program.aggregate(ctx, ex, kept, arrived, rnd)
+        acc, loss = program.evaluate(ctx)
+        ctx.history.append(M.RoundMetrics(
+            rnd, acc, loss, ctx.ledger.mean_client_bytes_per_round(),
+            float(np.mean([c.flops for c in ctx.cost])),
+            epsilon=round_epsilon(ctx.acct, max(ctx.releases, default=0))))
+        if verbose:
+            print(f"[{tag}] round {rnd}: acc={acc:.4f} loss={loss:.4f}"
+                  + (f" arrived={len(arrived)}"
+                     if fed.aggregation == "async" else ""))
+    return FedResult(ctx.history, ctx.ledger, program.final_state(ctx),
+                     [c.flops for c in ctx.cost])

@@ -1,98 +1,56 @@
-"""Federated round engine — drives any of the three paper frameworks over
-one shared substrate and records the paper's metrics (accuracy, comm
-bytes, client FLOPs) per round.
+"""Federated round engine — the public entry point that drives any of
+the three paper frameworks over one shared substrate and records the
+paper's metrics (accuracy, comm bytes, client FLOPs) per round.
 
-    result = run_federated(cfg, fed, model_seed=0, data=..., task=...)
+    result = run_federated(cfg, fed, public, clients_data, test, ...)
 
 ``result.history`` is a list of RoundMetrics; ``result.ledger`` has every
 wire transfer; Fig. 3 / Fig. 4 / Table I benchmarks read from these.
 
-Execution backends (``FedConfig.backend``): every framework dispatches
-to either the ``sequential`` backend in this module (python loop over
-clients, one jitted step per batch — the paper-literal reference) or the
-``spmd`` backend (clients stacked on a leading axis, one jitted program
-per round; core/rounds_spmd.py + core/fed_spmd.py).  Both backends
+Since the RoundProgram refactor this module is a thin adapter: it
+validates the config, builds the model, and hands off to the composable
+pipeline in core/round_program.py, which runs every combination of
+
+    framework (fedllm | kd | split)
+    x backend (``FedConfig.backend``: sequential | spmd)
+    x aggregation (``FedConfig.aggregation``: sync | async)
+
+through one driver over the canonical stages ``broadcast ->
+local_update -> upload -> aggregate -> evaluate`` with privacy and
+heterogeneous-rank handling applied as middleware.  Both backends
 produce the same ledger bytes exactly and the same accuracy within fp32
 tolerance (tests/test_backend_parity.py).
+
+Pass ``mesh=`` (a jax mesh, e.g. launch/mesh.make_production_mesh) to
+let the SPMD backend shard the stacked client axis over the mesh's
+client axes with explicit NamedShardings (launch/sharding.py).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedConfig, ModelConfig
-from repro.core import kd as kd_mod
-from repro.core import metrics as M
-from repro.core import split as split_mod
-from repro.core.fedavg import evaluate, fedavg, make_fns
-from repro.core.heterogeneous import aggregate_hetero
-from repro.data import partition as part_mod
-from repro.data.loader import epoch_batches
+from repro.core.heterogeneous import normalize_ranks
+from repro.core.round_program import (FedResult, make_accountant,  # noqa: F401
+                                      round_epsilon, run_program)
 from repro.models.factory import build_model
 from repro.peft import lora as lora_lib
 
 
-@dataclasses.dataclass
-class FedResult:
-    history: List[M.RoundMetrics]
-    ledger: M.CommLedger
-    final_lora: Dict
-    client_flops: List[float]
-
-    @property
-    def final_accuracy(self) -> float:
-        return self.history[-1].accuracy if self.history else 0.0
-
-
-def _to_jax(batch):
-    return {k: jnp.asarray(v) for k, v in batch.items()}
-
-
-def make_accountant(fed: FedConfig):
-    """RDP accountant for the run, or None when DP is off entirely.
-
-    A clipping-only run (dp_clip > 0, noise 0) gets an accountant whose
-    epsilon is ``inf`` — the mechanism is active but offers no
-    (eps, delta) guarantee, and reporting 0.0 would claim the strongest
-    one instead."""
-    if not fed.privacy.dp_enabled:
-        return None
-    from repro.privacy.accountant import GaussianAccountant
-    return GaussianAccountant(fed.privacy.dp_noise_multiplier,
-                              fed.privacy.dp_delta)
-
-
-def round_epsilon(acct, releases: int) -> float:
-    """eps at the configured dp_delta after ``releases`` noisy uploads
-    per client; 0.0 when DP is not enabled (no accounting, no claim),
-    inf when clipping runs without noise."""
-    return acct.epsilon(releases) if acct is not None else 0.0
-
-
 def client_lora_ranks(fed: FedConfig, n_clients: int) -> List[int]:
-    """Per-client LoRA ranks, validated against the client count."""
-    if not fed.client_ranks:
-        return [fed.lora_rank] * n_clients
-    if len(fed.client_ranks) != n_clients:
-        raise ValueError(
-            f"client_ranks has {len(fed.client_ranks)} entries for "
-            f"{n_clients} clients")
-    if any(r < 1 or r > fed.lora_rank for r in fed.client_ranks):
-        raise ValueError(
-            f"client_ranks must lie in [1, lora_rank={fed.lora_rank}] "
-            f"(got {fed.client_ranks}); weak clients truncate the global "
-            "rank, they never exceed it")
-    return list(fed.client_ranks)
+    """Per-client LoRA ranks, validated against the client count
+    (core/heterogeneous.normalize_ranks is the single source of
+    truth)."""
+    return normalize_ranks(fed.client_ranks, n_clients, fed.lora_rank)
 
 
 def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
                   clients_data: List[Dict], test: Dict,
                   task: str = "classification", batch_size: int = 16,
-                  eval_batch: int = 64, verbose: bool = False) -> FedResult:
+                  eval_batch: int = 64, verbose: bool = False,
+                  mesh=None) -> FedResult:
     if fed.framework not in ("fedllm", "kd", "split"):
         raise ValueError(f"unknown framework {fed.framework!r}")
     backend = getattr(fed, "backend", "sequential") or "sequential"
@@ -118,278 +76,7 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     # Pallas fwd+bwd kernels when the policy selects them.
     from repro.kernels import ops as kernel_ops
     with kernel_ops.policy_scope(cfg.kernel_policy):
-        if fed.aggregation == "async":
-            from repro.core import async_agg   # lazy: avoids import cycle
-            return async_agg.run_async(model, base, cfg, fed, targets,
-                                       public, clients_data, test, task,
-                                       batch_size, eval_batch, verbose,
-                                       backend)
-        if backend == "spmd":
-            from repro.core import rounds_spmd  # lazy: avoids import cycle
-            return rounds_spmd.run_spmd(model, base, cfg, fed, targets,
-                                        public, clients_data, test, task,
-                                        batch_size, eval_batch, verbose)
-        if fed.framework == "fedllm":
-            return _run_fedllm(model, base, cfg, fed, targets, clients_data,
-                               test, task, batch_size, eval_batch, verbose)
-        if fed.framework == "kd":
-            return _run_kd(model, base, cfg, fed, targets, public,
-                           clients_data, test, task, batch_size, eval_batch,
-                           verbose)
-        return _run_split(model, base, cfg, fed, targets, clients_data,
-                          test, task, batch_size, eval_batch, verbose)
-
-
-# --------------------------------------------------------------------------- #
-# 1) FedLLMs (SSII.A)
-# --------------------------------------------------------------------------- #
-def _run_fedllm(model, base, cfg, fed, targets, clients_data, test, task,
-                batch_size, eval_batch, verbose):
-    from repro.privacy import dp as dp_mod
-    from repro.privacy.secure_agg import SecureAggSession
-
-    fns = make_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 1)
-    n_clients = len(clients_data)
-    ranks = client_lora_ranks(fed, n_clients)
-    hetero = len(set(ranks)) > 1
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-
-    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                   fed.lora_alpha)
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    n_lora = lora_lib.n_params(global_lt)
-
-    for rnd in range(fed.rounds):
-        # the sync masking cohort is every client, every round
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        locals_, weights = [], []
-        for ci, data in enumerate(clients_data):
-            # a1: distribute global params (truncate rank for weak clients)
-            lt = lora_lib.maybe_truncate_rank(global_lt, ranks[ci],
-                                              fed.lora_rank)
-            ledger.record(rnd, ci, "lora_params", M.DOWN, M.tree_bytes(lt))
-            # a2: local fine-tuning (per-example DP-SGD clipping inside
-            # the shared train step when privacy.dp_clip > 0)
-            opt = fns["opt_init"](lt)
-            n_tok = 0
-            for ep in range(fed.local_epochs):
-                for batch in epoch_batches(data, batch_size,
-                                           seed=fed.seed * 997 + rnd + ep):
-                    key, sub = jax.random.split(key)
-                    lt, opt, _ = fns["train_step"](base, lt, opt,
-                                                   _to_jax(batch), sub)
-                    n_tok += batch["tokens"].size
-            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(lt))
-            # a3: upload — seeded Gaussian noise on the payload, then
-            # pairwise secure-agg masks over the (noisy) upload
-            lt = dp_mod.privatize_tree(lt, dp_mod.noise_key(fed, rnd, ci),
-                                       priv.noise_std)
-            ledger.record(rnd, ci, "lora_params", M.UP, M.tree_bytes(lt))
-            if priv.dp_enabled:
-                ledger.record(rnd, ci, "dp_meta", M.UP, M.DP_META_BYTES)
-            secagg.collect(rnd, ci, lt)
-            locals_.append(lt)
-            weights.append(len(data["tokens"]))
-        # a4: aggregate (the masked sum cancels exactly — verified)
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        if hetero:
-            global_lt = aggregate_hetero(locals_, ranks, fed.lora_alpha,
-                                         fed.lora_rank, weights,
-                                         fed.hetero_agg)
-        else:
-            global_lt = fedavg(locals_, weights)
-        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss,
-            ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, rnd + 1)))
-        if verbose:
-            print(f"[fedllm] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
-    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
-
-
-# --------------------------------------------------------------------------- #
-# 2) KD-FedLLMs (SSII.B)
-# --------------------------------------------------------------------------- #
-def _run_kd(model, base, cfg, fed, targets, public, clients_data, test,
-            task, batch_size, eval_batch, verbose):
-    from repro.privacy import dp as dp_mod
-    from repro.privacy.secure_agg import SecureAggSession
-
-    fns = make_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 2)
-    n_clients = len(clients_data)
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-    # Heterogeneous ranks are KD's native habitat (paper SSIII.A): params
-    # never cross the wire, so each client simply trains at its own rank
-    # and the exchanged knowledge stays rank-agnostic.
-    ranks = client_lora_ranks(fed, n_clients)
-
-    client_lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base,
-                                     targets, ranks[ci], fed.lora_alpha)
-                  for ci in range(n_clients)]
-    client_opts = [fns["opt_init"](lt) for lt in client_lts]
-    server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
-                                   targets, fed.lora_rank, fed.lora_alpha)
-    server_opt = fns["opt_init"](server_lt)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    pub_tok = public["tokens"].size
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        uploaded = []
-        weights = []
-        for ci, data in enumerate(clients_data):
-            lt, opt = client_lts[ci], client_opts[ci]
-            # b1: local fine-tuning (params never leave the client;
-            # per-example DP-SGD clipping inside the shared train step)
-            n_tok = 0
-            for ep in range(fed.local_epochs):
-                for batch in epoch_batches(data, batch_size,
-                                           seed=fed.seed * 991 + rnd + ep):
-                    key, sub = jax.random.split(key)
-                    lt, opt, _ = fns["train_step"](base, lt, opt,
-                                                   _to_jax(batch), sub)
-                    n_tok += batch["tokens"].size
-            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(lt))
-            # b2: logits on the public dataset
-            logits = kd_mod.client_logits(fns, base, lt, public, eval_batch)
-            cost[ci].add_fwd(cfg, pub_tok)
-            # b3: upload — row-clipped noisy logits first (the KD threat
-            # surface), composing with the SSIV.B.2 compression
-            logits = dp_mod.privatize_logits(
-                logits, dp_mod.noise_key(fed, rnd, ci), fed)
-            logits, wire = kd_mod.compress_for_wire(logits, fed)
-            ledger.record(rnd, ci, "logits", M.UP, wire)
-            if priv.dp_enabled:
-                ledger.record(rnd, ci, "dp_meta", M.UP, M.DP_META_BYTES)
-            secagg.collect(rnd, ci, logits)
-            uploaded.append(logits)
-            weights.append(len(data["tokens"]))
-            client_lts[ci], client_opts[ci] = lt, opt
-        # b4: knowledge processing (masked sum cancels exactly — verified)
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        teacher = kd_mod.aggregate_knowledge(uploaded, weights)
-        # b5: server-side distillation into the global model
-        server_lt, server_opt, _ = kd_mod.distill(
-            fns, base, server_lt, server_opt, public, teacher,
-            fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
-        # b6/b7: global logits back to clients (wire size is arithmetic —
-        # no compression pipeline runs just to be discarded)
-        glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
-        glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
-        for ci in range(n_clients):
-            ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
-        # b8: client-side KD
-        for ci in range(n_clients):
-            client_lts[ci], client_opts[ci], _ = kd_mod.distill(
-                fns, base, client_lts[ci], client_opts[ci], public, glob,
-                fed.kd_epochs, eval_batch, seed=fed.seed + 31 * rnd + ci)
-            # KD training pass over the public set
-            cost[ci].add_train(cfg, pub_tok * fed.kd_epochs,
-                               lora_lib.n_params(client_lts[ci]))
-        acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, rnd + 1)))
-        if verbose:
-            print(f"[kd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
-    return FedResult(history, ledger, server_lt,
-                     [c.flops for c in cost])
-
-
-# --------------------------------------------------------------------------- #
-# 3) Split-FedLLMs (SSII.C)
-# --------------------------------------------------------------------------- #
-def _run_split(model, base, cfg, fed, targets, clients_data, test, task,
-               batch_size, eval_batch, verbose):
-    from repro.privacy import dp as dp_mod
-    from repro.privacy.secure_agg import SecureAggSession
-
-    fns = make_fns(model, fed, task)           # for eval on the full model
-    sfns = split_mod.make_split_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 3)
-    n_clients = len(clients_data)
-    ranks = client_lora_ranks(fed, n_clients)
-    hetero = len(set(ranks)) > 1
-    L = sfns["n_client_groups"]
-    n_groups = sfns["n_groups"]
-    frac_client = L / max(n_groups, 1)
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-    releases = 0            # per-client c2 noise events (for epsilon)
-
-    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                 fed.lora_alpha)
-    c_global, s_lt = split_mod.split_lora(full_lt, L)
-    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
-    s_opt = sfns["opt_init"](s_lt)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        locals_, weights = [], []
-        max_steps = 0
-        for ci, data in enumerate(clients_data):
-            # cc3: distribute the global client half (truncated for weak
-            # clients — only the *client-side* adapters are heterogeneous;
-            # the server half never leaves the server)
-            c_lt = lora_lib.maybe_truncate_rank(c_global, ranks[ci],
-                                                fed.lora_rank)
-            ledger.record(rnd, ci, "lora_params", M.DOWN,
-                          M.tree_bytes(c_lt))                      # cc3
-            c_opt = sfns["opt_init"](c_lt)
-            n_tok, step = 0, 0
-            for batch in epoch_batches(data, batch_size,
-                                       seed=fed.seed * 983 + rnd):
-                up, down = sfns["wire_bytes_per_batch"](
-                    batch["tokens"].shape)
-                ledger.record(rnd, ci, "activations", M.UP,
-                              up + batch["labels"].size * 4)        # c2
-                ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
-                if priv.dp_enabled:
-                    ledger.record(rnd, ci, "dp_meta", M.UP,
-                                  M.DP_META_BYTES)
-                key, sub = jax.random.split(key)
-                nkey = dp_mod.noise_key(fed, rnd, ci, step) \
-                    if priv.dp_enabled else None
-                c_lt, s_lt, c_opt, s_opt, _ = sfns["split_train_step"](
-                    base_c, base_s, c_lt, s_lt, c_opt, s_opt,
-                    _to_jax(batch), sub, nkey)
-                n_tok += batch["tokens"].size
-                step += 1
-            max_steps = max(max_steps, step)
-            cost[ci].add_train(cfg, n_tok, lora_lib.n_params(c_lt),
-                               frac_layers=frac_client)
-            ledger.record(rnd, ci, "lora_params", M.UP,
-                          M.tree_bytes(c_lt))                       # cc1
-            secagg.collect(rnd, ci, c_lt)
-            locals_.append(c_lt)
-            weights.append(len(data["tokens"]))
-        releases += max_steps
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        if hetero:                                                  # cc2
-            c_global = aggregate_hetero(locals_, ranks, fed.lora_alpha,
-                                        fed.lora_rank, weights,
-                                        fed.hetero_agg)
-        else:
-            c_global = fedavg(locals_, weights)
-        joined = split_mod.join_lora(c_global, s_lt)
-        acc, loss = evaluate(fns, base, joined, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, releases)))
-        if verbose:
-            print(f"[split] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
-    return FedResult(history, ledger, joined, [c.flops for c in cost])
+        return run_program(model, base, cfg, fed, targets, public,
+                           clients_data, test, task, batch_size,
+                           eval_batch, verbose, backend=backend,
+                           mesh=mesh)

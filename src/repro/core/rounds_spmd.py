@@ -1,640 +1,37 @@
-"""Host drivers for the SPMD execution backend
-(``FedConfig(backend="spmd")`` — selected by core/rounds.run_federated).
+"""SPMD execution backend (``FedConfig(backend="spmd")``) — a thin
+adapter over the unified pipeline.
 
-Each framework's parameter-server round runs as one jitted program over
-stacked per-client state (core/fed_spmd.py).  This module feeds those
-programs the stacked batch tensors, keeps the paper's communication
-ledger identical to the sequential backend (every wire size is derived
-from shapes, so byte totals agree exactly), and evaluates with the same
-jitted eval step.
+Since the RoundProgram refactor the per-framework host drivers that
+used to live here are gone: core/round_program.py's ``SpmdExecutor``
+runs every framework's ready-set as stacked per-rank bucketed programs
+(contiguous equal-rank segments for Split, preserving the paper's
+server-half visit order) built from core/fed_spmd.py, under both sync
+and async aggregation, with privacy and heterogeneous ranks applied as
+middleware — identical ledger bytes to the sequential backend by
+construction (tests/test_backend_parity.py).
 
-Parity contract (tests/test_backend_parity.py): per-round ledger bytes
-and client FLOPs match the sequential backend exactly; accuracy/loss
-match within fp32 tolerance (vmapped/batched reductions reorder float
-ops).  With ``lora_dropout > 0`` the backends draw different dropout
-masks — the sequential loop threads one RNG through clients in visit
-order, the SPMD programs use per-(client, step) keys — so bit-level
-parity is only defined at dropout 0.
+Given a mesh (``run_federated(..., mesh=...)``), the executor places
+the stacked client axis on the mesh's client axes with explicit
+NamedShardings (launch/sharding.py), so the client dimension of a real
+run shards over the pod/data axes — not just in the dry-run.
 
-Heterogeneous LoRA ranks (``FedConfig.client_ranks``) run as per-rank
-*buckets*: clients sharing a rank stack on one leading axis and run one
-jitted program per bucket, then the buckets harmonize through the same
-``core/heterogeneous.aggregate_hetero`` (zeropad | svd) the sequential
-backend uses.  Split-FedLLM buckets only contiguous equal-rank runs
-(``fed_spmd.rank_segments``) — the shared server half is trained
-client-after-client, and reordering clients would change the paper's
-optimization trajectory.  Wire bytes stay per-simulated-client and
-rank-exact (``CommLedger.record_bucket``), so Fig. 4 extends to the
-heterogeneous setting unchanged.
+Parity contract: per-round ledger bytes and client FLOPs match the
+sequential backend exactly; accuracy/loss match within fp32 tolerance
+(vmapped/batched reductions reorder float ops).  With ``lora_dropout >
+0`` the backends draw different (equally valid) dropout masks from the
+same per-(client, round) roots (core/rng.py) — bit-level parity is only
+defined at dropout 0.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import fed_spmd
-from repro.core import kd as kd_mod
-from repro.core import metrics as M
-from repro.core import split as split_mod
-from repro.core.fedavg import evaluate, make_fns
-from repro.core.heterogeneous import harmonize_buckets
-from repro.core.rounds import (FedResult, client_lora_ranks,
-                               make_accountant, round_epsilon)
-from repro.data.loader import epoch_batches
-from repro.peft import lora as lora_lib
-from repro.privacy import dp as dp_mod
-from repro.privacy.secure_agg import SecureAggSession
+from repro.core.round_program import run_program
 
 
 def run_spmd(model, base, cfg, fed, targets, public: Dict,
              clients_data: List[Dict], test: Dict, task: str,
-             batch_size: int, eval_batch: int, verbose: bool):
-    runner = {"fedllm": _run_fedllm_spmd, "kd": _run_kd_spmd,
-              "split": _run_split_spmd}[fed.framework]
-    return runner(model, base, cfg, fed, targets, public, clients_data,
-                  test, task, batch_size, eval_batch, verbose)
-
-
-def _client_weights(clients_data):
-    w = [len(d["tokens"]) for d in clients_data]
-    return w, jnp.asarray(np.asarray(w, np.float32))
-
-
-# --------------------------------------------------------------------------- #
-# 1) FedLLMs
-# --------------------------------------------------------------------------- #
-def _run_fedllm_spmd(model, base, cfg, fed, targets, public, clients_data,
-                     test, task, batch_size, eval_batch, verbose):
-    ranks = client_lora_ranks(fed, len(clients_data))
-    if len(set(ranks)) > 1:
-        return _run_fedllm_spmd_hetero(model, base, cfg, fed, targets,
-                                       clients_data, test, task, batch_size,
-                                       eval_batch, verbose, ranks)
-    fns = make_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 1)
-    n_clients = len(clients_data)
-    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                   fed.lora_alpha)
-    round_step = jax.jit(fed_spmd.make_spmd_round(model, fed, task))
-    priv, acct = fed.privacy, make_accountant(fed)
-    noised = priv.noise_std > 0.0
-    secagg = SecureAggSession(fed)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    _, wj = _client_weights(clients_data)
-    lt_bytes = M.tree_bytes(global_lt)
-    n_lora = lora_lib.n_params(global_lt)
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
-        batches, valid, n_tok = fed_spmd.stack_client_batches(
-            clients_data, batch_size, seeds)
-        # a1: distribute the (identical) global params to every slot
-        ledger.record_batch(rnd, "lora_params", M.DOWN,
-                            [lt_bytes] * n_clients)
-        stacked_lt = fed_spmd.stack_for_clients(global_lt, n_clients)
-        stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](global_lt),
-                                                 n_clients)
-        key, sub = jax.random.split(key)
-        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
-        # a2-a4 as one program: vmapped local scans (+ in-program DP
-        # payload noise from the shared per-client fold_in keys) +
-        # client-axis FedAvg; the pre-aggregation uploads come back for
-        # the secure-agg masking overlay
-        extra = (jnp.stack([dp_mod.noise_key(fed, rnd, ci)
-                            for ci in range(n_clients)]),) if noised else ()
-        redist, _, _, uploaded = round_step(
-            base, stacked_lt, stacked_opt, batches, keys,
-            jnp.asarray(valid), wj, *extra)
-        global_lt = jax.tree.map(lambda x: x[0], redist)
-        # a3: upload — same shapes as the download
-        ledger.record_batch(rnd, "lora_params", M.UP, [lt_bytes] * n_clients)
-        if priv.dp_enabled:
-            ledger.record_batch(rnd, "dp_meta", M.UP,
-                                [M.DP_META_BYTES] * n_clients)
-        if secagg.enabled:
-            for ci, t in enumerate(fed_spmd.unstack_tree(uploaded)):
-                secagg.collect(rnd, ci, t)
-            secagg.deliver(ledger, rnd,
-                           [(rnd, ci) for ci in range(n_clients)])
-        for ci in range(n_clients):
-            cost[ci].add_train(cfg, n_tok[ci], n_lora)
-        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, rnd + 1)))
-        if verbose:
-            print(f"[fedllm/spmd] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f}")
-    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
-
-
-def _run_fedllm_spmd_hetero(model, base, cfg, fed, targets, clients_data,
-                            test, task, batch_size, eval_batch, verbose,
-                            ranks):
-    """Per-rank bucketed FedLLM round: one jitted stacked program per
-    bucket (vmapped local scans, no in-program FedAvg), then zeropad/svd
-    harmonization across buckets — the sequential backend's exact
-    aggregation code path, fed in client visit order."""
-    fns = make_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 1)
-    n_clients = len(clients_data)
-    global_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                   fed.lora_alpha)
-    bucket_update = fed_spmd.make_bucket_update(model, fed, task)
-    buckets = fed_spmd.rank_buckets(ranks)
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    weights, _ = _client_weights(clients_data)
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
-        bucket_trees, bucket_clients = [], []
-        for rank, cis in buckets:
-            # a1: distribute (truncated) global params to the bucket
-            lt0 = lora_lib.maybe_truncate_rank(global_lt, rank,
-                                               fed.lora_rank)
-            lt_bytes = M.tree_bytes(lt0)
-            n_lora = lora_lib.n_params(lt0)
-            ledger.record_bucket(rnd, cis, "lora_params", M.DOWN, lt_bytes)
-            batches, valid, n_tok = fed_spmd.stack_client_batches(
-                [clients_data[ci] for ci in cis], batch_size, seeds)
-            stacked_lt = fed_spmd.stack_for_clients(lt0, len(cis))
-            stacked_opt = fed_spmd.stack_for_clients(fns["opt_init"](lt0),
-                                                     len(cis))
-            key, sub = jax.random.split(key)
-            keys = fed_spmd.split_keys(sub, len(cis), valid.shape[1])
-            # a2: one stacked program per bucket
-            new_lt, _, _ = bucket_update(base, stacked_lt, stacked_opt,
-                                         batches, keys, jnp.asarray(valid))
-            # a3: upload — rank-exact per-bucket wire bytes; DP payload
-            # noise per client (host side — the bucket programs return
-            # pre-aggregation trees anyway), then secure-agg masking
-            trees = fed_spmd.unstack_tree(new_lt)
-            trees = [dp_mod.privatize_tree(
-                t, dp_mod.noise_key(fed, rnd, ci), priv.noise_std)
-                for ci, t in zip(cis, trees)]
-            ledger.record_bucket(rnd, cis, "lora_params", M.UP, lt_bytes)
-            if priv.dp_enabled:
-                ledger.record_bucket(rnd, cis, "dp_meta", M.UP,
-                                     M.DP_META_BYTES)
-            for k, ci in enumerate(cis):
-                secagg.collect(rnd, ci, trees[k])
-                cost[ci].add_train(cfg, n_tok[k], n_lora)
-            bucket_trees.append(trees)
-            bucket_clients.append(list(cis))
-        # a4: cross-bucket harmonization (zeropad | svd)
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        global_lt = harmonize_buckets(bucket_trees, bucket_clients, ranks,
-                                      fed.lora_alpha, fed.lora_rank,
-                                      weights, fed.hetero_agg)
-        acc, loss = evaluate(fns, base, global_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, rnd + 1)))
-        if verbose:
-            print(f"[fedllm/spmd-hetero] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f}")
-    return FedResult(history, ledger, global_lt, [c.flops for c in cost])
-
-
-# --------------------------------------------------------------------------- #
-# 2) KD-FedLLMs
-# --------------------------------------------------------------------------- #
-def _batched_public_logits(kfns, base, stacked_lt, public, batch_size):
-    """b2/b6 for every client at once — same batch order and original-
-    row-order scatter as kd.client_logits, giving (C, N, D) with row i
-    holding public sample i's logits.  Device arrays end-to-end: the b3
-    compression that follows never syncs through the host."""
-    outs = []
-    for batch in epoch_batches(public, batch_size, seed=0,
-                               drop_remainder=False):
-        jb = {k: jnp.asarray(v) for k, v in batch.items()}
-        outs.append(kfns["batched_logits"](base, stacked_lt, jb))
-    stacked = jnp.concatenate(outs, axis=1)
-    perm = jnp.asarray(kd_mod._epoch_perm(len(public["tokens"]), 0))
-    return jnp.zeros_like(stacked).at[:, perm].set(stacked)
-
-
-def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
-                     fed, batch_size, rnd, client_ids):
-    """b8 for every client in a (bucket-)stack at once.  Clients distill
-    against the SAME global knowledge over the SAME public batch order
-    (kd.distill), so the per-batch step vmaps cleanly over the client
-    axis.  Per-client RNG streams match the sequential backend's
-    PRNGKey(seed + 31r + ci) — ``client_ids`` carries the *global*
-    client indices of the stack's rows."""
-    rngs = jnp.stack([jax.random.PRNGKey(fed.seed + 31 * rnd + ci)
-                      for ci in client_ids])
-    n = len(public["tokens"])
-    for ep in range(fed.kd_epochs):
-        perm = kd_mod._epoch_perm(n, ep)
-        start = 0
-        for batch in epoch_batches(public, batch_size, seed=ep,
-                                   drop_remainder=False):
-            sel = perm[start:start + len(batch["tokens"])]
-            start += len(batch["tokens"])
-            jb = {k: jnp.asarray(v) for k, v in batch.items()}
-            t = jnp.asarray(teacher[sel])
-            rngs, subs = fed_spmd.split_each(rngs)
-            stacked_lt, stacked_opt, _ = kfns["batched_kd_step"](
-                base, stacked_lt, stacked_opt, jb, t, subs)
-    return stacked_lt, stacked_opt
-
-
-def _run_kd_spmd(model, base, cfg, fed, targets, public, clients_data,
-                 test, task, batch_size, eval_batch, verbose):
-    """KD round over per-rank buckets (homogeneous ranks = one bucket,
-    which is exactly the old single-stack program).  Params never cross
-    the wire in KD, so heterogeneity costs nothing at the protocol level
-    — each bucket's stack just trains and produces knowledge at its own
-    rank, and the (C, N, D) logit reduction is rank-agnostic."""
-    fns = make_fns(model, fed, task)
-    kfns = fed_spmd.make_kd_spmd_fns(model, fed, task)
-    key = jax.random.PRNGKey(fed.seed + 2)
-    n_clients = len(clients_data)
-    ranks = client_lora_ranks(fed, n_clients)
-    buckets = fed_spmd.rank_buckets(ranks)
-    priv, acct = fed.privacy, make_accountant(fed)
-    secagg = SecureAggSession(fed)
-
-    # per-bucket stacked client state (same fold_in(key, ci) init stream
-    # as the sequential backend, so hetero init is bit-identical)
-    b_lts, b_opts, b_nlora = [], [], []
-    for rank, cis in buckets:
-        lts = [lora_lib.init_lora(jax.random.fold_in(key, ci), base,
-                                  targets, rank, fed.lora_alpha)
-               for ci in cis]
-        b_lts.append(fed_spmd.stack_trees(lts))
-        b_opts.append(fed_spmd.stack_for_clients(fns["opt_init"](lts[0]),
-                                                 len(cis)))
-        b_nlora.append(lora_lib.n_params(lts[0]))
-    server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999), base,
-                                   targets, fed.lora_rank, fed.lora_alpha)
-    server_opt = fns["opt_init"](server_lt)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    weights, _ = _client_weights(clients_data)
-    pub_tok = public["tokens"].size
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
-        uploaded = [None] * n_clients
-        for bi, (rank, cis) in enumerate(buckets):
-            # b1: vmapped local fine-tuning (one program per bucket)
-            batches, valid, n_tok = fed_spmd.stack_client_batches(
-                [clients_data[ci] for ci in cis], batch_size, seeds)
-            key, sub = jax.random.split(key)
-            keys = fed_spmd.split_keys(sub, len(cis), valid.shape[1])
-            b_lts[bi], b_opts[bi], _ = kfns["client_update"](
-                base, b_lts[bi], b_opts[bi], batches, keys,
-                jnp.asarray(valid))
-            # b2: batched logit production on the public set -> (|b|, N, D)
-            logits_cnd = _batched_public_logits(kfns, base, b_lts[bi],
-                                                public, eval_batch)
-            # b3: per-simulated-client privatization (row-clipped noisy
-            # logits — same fold_in keys as the sequential backend) +
-            # compression + upload accounting
-            for k, ci in enumerate(cis):
-                lg = dp_mod.privatize_logits(
-                    logits_cnd[k], dp_mod.noise_key(fed, rnd, ci), fed)
-                lg, wire = kd_mod.compress_for_wire(lg, fed)
-                ledger.record(rnd, ci, "logits", M.UP, wire)
-                if priv.dp_enabled:
-                    ledger.record(rnd, ci, "dp_meta", M.UP,
-                                  M.DP_META_BYTES)
-                secagg.collect(rnd, ci, lg)
-                uploaded[ci] = lg
-                cost[ci].add_train(cfg, n_tok[k], b_nlora[bi])
-                cost[ci].add_fwd(cfg, pub_tok)
-        # b4: knowledge processing as a client-axis reduction (on device)
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        teacher = kd_mod.aggregate_knowledge_batched(
-            jnp.stack(uploaded), weights)
-        # b5: server-side distillation into the global model
-        server_lt, server_opt, _ = kd_mod.distill(
-            fns, base, server_lt, server_opt, public, teacher,
-            fed.kd_epochs, eval_batch, seed=fed.seed + rnd)
-        # b6/b7: global logits back to every client (arithmetic wire size)
-        glob = kd_mod.client_logits(fns, base, server_lt, public, eval_batch)
-        glob_wire = kd_mod.logit_wire_bytes(glob.shape, fed)
-        ledger.record_batch(rnd, "logits", M.DOWN, [glob_wire] * n_clients)
-        # b8: vmapped client-side distillation, one program per bucket
-        for bi, (rank, cis) in enumerate(buckets):
-            b_lts[bi], b_opts[bi] = _batched_distill(
-                kfns, base, b_lts[bi], b_opts[bi], public, glob, fed,
-                eval_batch, rnd, cis)
-            for ci in cis:
-                cost[ci].add_train(cfg, pub_tok * fed.kd_epochs,
-                                   b_nlora[bi])
-        acc, loss = evaluate(fns, base, server_lt, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, rnd + 1)))
-        if verbose:
-            print(f"[kd/spmd] round {rnd}: acc={acc:.4f} loss={loss:.4f}")
-    return FedResult(history, ledger, server_lt, [c.flops for c in cost])
-
-
-# --------------------------------------------------------------------------- #
-# 3) Split-FedLLMs
-# --------------------------------------------------------------------------- #
-def _run_split_spmd(model, base, cfg, fed, targets, public, clients_data,
-                    test, task, batch_size, eval_batch, verbose):
-    ranks = client_lora_ranks(fed, len(clients_data))
-    if len(set(ranks)) > 1:
-        return _run_split_spmd_hetero(model, base, cfg, fed, targets,
-                                      clients_data, test, task, batch_size,
-                                      eval_batch, verbose, ranks)
-    fns = make_fns(model, fed, task)           # for eval on the full model
-    sfns = split_mod.make_split_fns(model, fed, task)
-    round_step = jax.jit(fed_spmd.make_split_spmd_round(model, fed, task,
-                                                        sfns=sfns))
-    key = jax.random.PRNGKey(fed.seed + 3)
-    n_clients = len(clients_data)
-    L = sfns["n_client_groups"]
-    frac_client = L / max(sfns["n_groups"], 1)
-    priv, acct = fed.privacy, make_accountant(fed)
-    noised = priv.noise_std > 0.0
-    secagg = SecureAggSession(fed)
-    releases = 0
-
-    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                 fed.lora_alpha)
-    c_global, s_lt = split_mod.split_lora(full_lt, L)
-    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
-    s_opt = sfns["opt_init"](s_lt)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    weights, wj = _client_weights(clients_data)
-    c_bytes = M.tree_bytes(c_global)
-    n_c_lora = lora_lib.n_params(c_global)
-    joined = full_lt
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        batches, valid, n_tok = fed_spmd.stack_client_batches(
-            clients_data, batch_size, [fed.seed * 983 + rnd])
-        key, sub = jax.random.split(key)
-        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
-        # wire bytes are shape-derived — identical per (client, batch)
-        up, down = sfns["wire_bytes_per_batch"](batches["tokens"].shape[-2:])
-        lbl = batches["labels"][0, 0].size * 4 if "labels" in batches else 0
-        for ci in range(n_clients):
-            ledger.record(rnd, ci, "lora_params", M.DOWN, c_bytes)   # cc3
-            for _ in range(int(valid[ci].sum())):
-                ledger.record(rnd, ci, "activations", M.UP, up + lbl)  # c2
-                ledger.record(rnd, ci, "act_grads", M.DOWN, down)      # c4
-                if priv.dp_enabled:
-                    ledger.record(rnd, ci, "dp_meta", M.UP,
-                                  M.DP_META_BYTES)
-            cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
-                               frac_layers=frac_client)
-            ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)     # cc1
-        extra = (dp_mod.noise_key_grid(fed, rnd, range(n_clients),
-                                       valid.shape[1]),) if noised else ()
-        c_global, s_lt, s_opt, _, stacked_c = round_step(
-            base_c, base_s, c_global, s_lt, s_opt, batches, keys,
-            jnp.asarray(valid), wj, *extra)
-        if secagg.enabled:
-            for ci, t in enumerate(fed_spmd.unstack_tree(stacked_c)):
-                secagg.collect(rnd, ci, t)
-            secagg.deliver(ledger, rnd,
-                           [(rnd, ci) for ci in range(n_clients)])
-        releases += int(valid.sum(axis=1).max())
-        joined = split_mod.join_lora(c_global, s_lt)
-        acc, loss = evaluate(fns, base, joined, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, releases)))
-        if verbose:
-            print(f"[split/spmd] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f}")
-    return FedResult(history, ledger, joined, [c.flops for c in cost])
-
-
-# --------------------------------------------------------------------------- #
-# Async executors (core/async_agg.py drives; this backend runs each
-# round's ready-set as per-rank bucketed stacked programs)
-# --------------------------------------------------------------------------- #
-def _grid_keys(fed, rnd, cis, n_steps):
-    """(|bucket|, S) dropout-key grid from the shared per-(client, round)
-    async RNG stream, so sequential/SPMD async agree at dropout 0 and
-    draw equally valid masks otherwise."""
-    from repro.core.async_agg import _local_rng
-    return jnp.stack([jax.random.split(_local_rng(fed, rnd, ci), n_steps)
-                      for ci in cis])
-
-
-def spmd_fedllm_exec(model, base, cfg, fed, targets, clients_data, public,
-                     task, batch_size, eval_batch, ranks):
-    fns = make_fns(model, fed, task)
-    bucket_update = fed_spmd.make_bucket_update(model, fed, task)
-
-    def train(jobs, rnd):
-        by_ci = dict(jobs)
-        seeds = [fed.seed * 997 + rnd + ep for ep in range(fed.local_epochs)]
-        results = {}
-        for rank, cis in fed_spmd.rank_buckets(ranks, list(by_ci)):
-            stacked_lt = fed_spmd.stack_trees([by_ci[ci] for ci in cis])
-            stacked_opt = fed_spmd.stack_for_clients(
-                fns["opt_init"](by_ci[cis[0]]), len(cis))
-            batches, valid, n_tok = fed_spmd.stack_client_batches(
-                [clients_data[ci] for ci in cis], batch_size, seeds)
-            keys = _grid_keys(fed, rnd, cis, valid.shape[1])
-            new_lt, _, _ = bucket_update(base, stacked_lt, stacked_opt,
-                                         batches, keys, jnp.asarray(valid))
-            for k, (ci, t) in enumerate(
-                    zip(cis, fed_spmd.unstack_tree(new_lt))):
-                results[ci] = (t, n_tok[k])
-        return [results[ci] for ci, _ in jobs]
-
-    from types import SimpleNamespace
-    return SimpleNamespace(fns=fns, targets=targets, train=train)
-
-
-def spmd_kd_exec(model, base, cfg, fed, targets, clients_data, public,
-                 task, batch_size, eval_batch, ranks):
-    from repro.core.async_agg import make_kd_state
-
-    ex = make_kd_state(model, base, fed, targets, ranks, public, task)
-    kfns = fed_spmd.make_kd_spmd_fns(model, fed, task)
-    lts, opts = ex.lts, ex.opts
-
-    def train_and_logits(cis, rnd):
-        seeds = [fed.seed * 991 + rnd + ep for ep in range(fed.local_epochs)]
-        results = {}
-        for rank, bcis in fed_spmd.rank_buckets(ranks, cis):
-            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
-            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
-            batches, valid, n_tok = fed_spmd.stack_client_batches(
-                [clients_data[ci] for ci in bcis], batch_size, seeds)
-            keys = _grid_keys(fed, rnd, bcis, valid.shape[1])
-            sl, so, _ = kfns["client_update"](base, sl, so, batches, keys,
-                                              jnp.asarray(valid))
-            logits = _batched_public_logits(kfns, base, sl, public,
-                                            eval_batch)
-            for k, (ci, lt, opt) in enumerate(zip(
-                    bcis, fed_spmd.unstack_tree(sl),
-                    fed_spmd.unstack_tree(so))):
-                lts[ci], opts[ci] = lt, opt
-                results[ci] = (logits[k], n_tok[k])
-        return [results[ci] for ci in cis]
-
-    def distill(cis, glob, rnd):
-        for rank, bcis in fed_spmd.rank_buckets(ranks, cis):
-            sl = fed_spmd.stack_trees([lts[ci] for ci in bcis])
-            so = fed_spmd.stack_trees([opts[ci] for ci in bcis])
-            sl, so = _batched_distill(kfns, base, sl, so, public, glob,
-                                      fed, eval_batch, rnd, bcis)
-            for ci, lt, opt in zip(bcis, fed_spmd.unstack_tree(sl),
-                                   fed_spmd.unstack_tree(so)):
-                lts[ci], opts[ci] = lt, opt
-
-    ex.train_and_logits, ex.distill = train_and_logits, distill
-    return ex
-
-
-def spmd_split_exec(model, base, cfg, fed, targets, clients_data, public,
-                    task, batch_size, eval_batch, ranks):
-    from repro.core.async_agg import make_split_state
-
-    ex = make_split_state(model, base, cfg, fed, targets, clients_data,
-                          task, batch_size)
-    seg_step = jax.jit(fed_spmd.make_split_spmd_segment(model, fed, task,
-                                                        sfns=ex.sfns))
-    base_c, base_s = ex.base_c, ex.base_s
-
-    noised = fed.privacy.noise_std > 0.0
-
-    def train(jobs, rnd):
-        by_ci = dict(jobs)
-        results = {}
-        # fuse contiguous equal-rank runs of the ready-set; the server
-        # carry threads through segments in client visit order
-        for rank, cis in fed_spmd.rank_segments(ranks, list(by_ci)):
-            batches, valid, n_tok = fed_spmd.stack_client_batches(
-                [clients_data[ci] for ci in cis], batch_size,
-                [fed.seed * 983 + rnd])
-            keys = _grid_keys(fed, rnd, cis, valid.shape[1])
-            extra = (dp_mod.noise_key_grid(fed, rnd, cis,
-                                           valid.shape[1]),) if noised \
-                else ()
-            stacked_c, ex.s_lt, ex.s_opt, _ = seg_step(
-                base_c, base_s, by_ci[cis[0]], ex.s_lt, ex.s_opt, batches,
-                keys, jnp.asarray(valid), *extra)
-            shape = tuple(batches["tokens"].shape[-2:])
-            for k, (ci, t) in enumerate(
-                    zip(cis, fed_spmd.unstack_tree(stacked_c))):
-                results[ci] = (t, n_tok[k], int(valid[k].sum()), shape)
-        return [results[ci] for ci, _ in jobs]
-
-    ex.train = train
-    return ex
-
-
-def _run_split_spmd_hetero(model, base, cfg, fed, targets, clients_data,
-                           test, task, batch_size, eval_batch, verbose,
-                           ranks):
-    """Heterogeneous Split-FedLLM: contiguous equal-rank client runs
-    become stacked *segment* programs; the shared server half's carry is
-    threaded segment-after-segment, reproducing the sequential backend's
-    exact client visit order.  Only the client-side adapters are
-    heterogeneous — the closing FedAvg harmonizes them across segments
-    (zeropad | svd) back to the global rank."""
-    fns = make_fns(model, fed, task)           # for eval on the full model
-    sfns = split_mod.make_split_fns(model, fed, task)
-    seg_step = jax.jit(fed_spmd.make_split_spmd_segment(model, fed, task,
-                                                        sfns=sfns))
-    key = jax.random.PRNGKey(fed.seed + 3)
-    n_clients = len(clients_data)
-    L = sfns["n_client_groups"]
-    frac_client = L / max(sfns["n_groups"], 1)
-    segments = fed_spmd.rank_segments(ranks)
-    priv, acct = fed.privacy, make_accountant(fed)
-    noised = priv.noise_std > 0.0
-    secagg = SecureAggSession(fed)
-    releases = 0
-
-    full_lt = lora_lib.init_lora(key, base, targets, fed.lora_rank,
-                                 fed.lora_alpha)
-    c_global, s_lt = split_mod.split_lora(full_lt, L)
-    base_c, base_s = split_mod.split_base(base, L, cfg.is_encoder_decoder)
-    s_opt = sfns["opt_init"](s_lt)
-
-    ledger, history, cost = M.CommLedger(), [], \
-        [M.ClientCost() for _ in range(n_clients)]
-    weights, _ = _client_weights(clients_data)
-    joined = full_lt
-
-    for rnd in range(fed.rounds):
-        secagg.begin_cohort(ledger, rnd, range(n_clients))
-        batches, valid, n_tok = fed_spmd.stack_client_batches(
-            clients_data, batch_size, [fed.seed * 983 + rnd])
-        key, sub = jax.random.split(key)
-        keys = fed_spmd.split_keys(sub, n_clients, valid.shape[1])
-        up, down = sfns["wire_bytes_per_batch"](batches["tokens"].shape[-2:])
-        lbl = batches["labels"][0, 0].size * 4 if "labels" in batches else 0
-        seg_trees, seg_clients = [], []
-        for rank, cis in segments:
-            lo, hi = cis[0], cis[-1] + 1       # contiguous by construction
-            c_init = lora_lib.maybe_truncate_rank(c_global, rank,
-                                                  fed.lora_rank)
-            c_bytes = M.tree_bytes(c_init)
-            n_c_lora = lora_lib.n_params(c_init)
-            for ci in cis:
-                ledger.record(rnd, ci, "lora_params", M.DOWN, c_bytes)  # cc3
-                for _ in range(int(valid[ci].sum())):
-                    ledger.record(rnd, ci, "activations", M.UP,
-                                  up + lbl)                             # c2
-                    ledger.record(rnd, ci, "act_grads", M.DOWN, down)   # c4
-                    if priv.dp_enabled:
-                        ledger.record(rnd, ci, "dp_meta", M.UP,
-                                      M.DP_META_BYTES)
-                cost[ci].add_train(cfg, n_tok[ci], n_c_lora,
-                                   frac_layers=frac_client)
-                ledger.record(rnd, ci, "lora_params", M.UP, c_bytes)    # cc1
-            extra = (dp_mod.noise_key_grid(fed, rnd, cis,
-                                           valid.shape[1]),) if noised \
-                else ()
-            stacked_c, s_lt, s_opt, _ = seg_step(
-                base_c, base_s, c_init, s_lt, s_opt,
-                {k: v[lo:hi] for k, v in batches.items()},
-                keys[lo:hi], jnp.asarray(valid[lo:hi]), *extra)
-            trees = fed_spmd.unstack_tree(stacked_c)
-            for ci, t in zip(cis, trees):
-                secagg.collect(rnd, ci, t)
-            seg_trees.append(trees)
-            seg_clients.append(list(cis))
-        # cc2: harmonize the client halves across segments
-        secagg.deliver(ledger, rnd, [(rnd, ci) for ci in range(n_clients)])
-        releases += int(valid.sum(axis=1).max())
-        c_global = harmonize_buckets(seg_trees, seg_clients, ranks,
-                                     fed.lora_alpha, fed.lora_rank,
-                                     weights, fed.hetero_agg)
-        joined = split_mod.join_lora(c_global, s_lt)
-        acc, loss = evaluate(fns, base, joined, test, eval_batch)
-        history.append(M.RoundMetrics(
-            rnd, acc, loss, ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in cost])),
-            epsilon=round_epsilon(acct, releases)))
-        if verbose:
-            print(f"[split/spmd-hetero] round {rnd}: acc={acc:.4f} "
-                  f"loss={loss:.4f}")
-    return FedResult(history, ledger, joined, [c.flops for c in cost])
+             batch_size: int, eval_batch: int, verbose: bool, mesh=None):
+    return run_program(model, base, cfg, fed, targets, public,
+                       clients_data, test, task, batch_size, eval_batch,
+                       verbose, backend="spmd", mesh=mesh)

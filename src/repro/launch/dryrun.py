@@ -44,9 +44,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             fed_framework: str = "fedllm", kernel_policy: str = None,
             client_ranks=None, aggregation: str = "sync",
             dp_clip: float = 0.0, dp_noise_multiplier: float = 0.0,
-            secure_agg: bool = False) -> dict:
+            secure_agg: bool = False, backend: str = "spmd",
+            shard_clients: bool = False, n_clients: int = None) -> dict:
     from repro.configs.base import PrivacyConfig
 
+    if step == "fed_round" and backend != "spmd":
+        raise ValueError(
+            "--step fed_round lowers the SPMD round program (the "
+            "sequential backend is a python loop with no single-program "
+            "artifact); use --backend spmd")
     cfg = get_config(arch)
     if kernel_policy:
         # thread ModelConfig.kernel_policy through the lowering path —
@@ -62,6 +68,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
            "kernel_policy": cfg.kernel_policy}
     if step == "fed_round":
         rec["fed_framework"] = fed_framework
+        rec["backend"] = backend
         # async reuses the same per-bucket local-update programs — the
         # arrival schedule is host-side — so the compile artifact is the
         # sync one; the record keeps the axis visible in sweeps.
@@ -106,6 +113,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
+    if step == "fed_round" and shard_clients:
+        from repro.launch.mesh import client_axes, client_axis_size
+        # default the client count to the client-axis extent so the
+        # stacked axis shards 1:1 over the mesh's client axes
+        if n_clients is None:
+            n_clients = client_axis_size(mesh)
+        rec["client_axis"] = list(client_axes(mesh))
+        rec["shard_clients"] = True
     rec["status"] = "OK"
     programs = []
     with activate_mesh(mesh):
@@ -114,10 +129,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             try:
                 t0 = time.time()
                 if step == "fed_round":
+                    fed_kw = dict(framework=fed_framework, privacy=privacy,
+                                  shard_clients=shard_clients)
+                    if n_clients is not None:
+                        fed_kw["n_clients"] = n_clients
+                    fed_kw.update(build_kw)
                     fn, args, shardings = steps_mod.build_fed_round_step(
-                        cfg, shape, mesh, remat=remat,
-                        framework=fed_framework, privacy=privacy,
-                        **build_kw)
+                        cfg, shape, mesh, remat=remat, **fed_kw)
                 else:
                     fn, args, shardings = steps_mod.build_step(
                         cfg, shape, mesh, scan_layers=scan_layers,
@@ -151,6 +169,26 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                         "dp_clip_mean_rows kernel is not in the traced "
                         "jaxpr — the DP-SGD path did not reach the "
                         "jitted round")
+
+            if step == "fed_round" and shard_clients:
+                # acceptance gate: the client-axis NamedSharding must be
+                # visible in the lowered program (GSPMD spells it
+                # 'devices=[C,...'; the Shardy partitioner spells it
+                # '#sdy.sharding<..{"<axis>"}..>')
+                from repro.launch.mesh import (client_axes,
+                                               client_axis_size)
+                txt = lowered.as_text()
+                size = client_axis_size(mesh)
+                ax = client_axes(mesh)[0]
+                in_hlo = (f"devices=[{size}," in txt) or (
+                    "sdy.sharding" in txt and f'{{"{ax}"}}' in txt)
+                rec["client_axis_sharding_in_hlo"] = in_hlo
+                if not in_hlo:
+                    raise RuntimeError(
+                        "--shard-clients but no client-axis sharding is "
+                        "visible in the lowered program — the stacked "
+                        "client dimension did not reach the mesh's "
+                        f"{ax!r} axis")
 
             ma = compiled.memory_analysis()
             ca = cost_analysis_dict(compiled)
@@ -222,6 +260,21 @@ def main():
     ap.add_argument("--fed-framework", default="fedllm",
                     choices=["fedllm", "kd", "split"],
                     help="which paper framework --step fed_round compiles")
+    ap.add_argument("--backend", default="spmd",
+                    choices=["sequential", "spmd"],
+                    help="round-engine execution backend for --step "
+                         "fed_round; only spmd has a single-program "
+                         "compile artifact")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="shard the stacked client axis of --step "
+                         "fed_round over the mesh's client axes "
+                         "(launch/mesh.client_axes) with explicit "
+                         "NamedShardings, and verify the sharding is "
+                         "visible in the lowered program")
+    ap.add_argument("--n-clients", type=int, default=None,
+                    help="client count for --step fed_round (default 2, "
+                         "or the client-axis extent with "
+                         "--shard-clients)")
     ap.add_argument("--kernel-policy", default=None,
                     choices=["xla", "pallas", "auto"],
                     help="override ModelConfig.kernel_policy for the "
@@ -277,7 +330,10 @@ def main():
                                    dp_clip=args.dp_clip,
                                    dp_noise_multiplier=(
                                        args.dp_noise_multiplier),
-                                   secure_agg=args.secure_agg))
+                                   secure_agg=args.secure_agg,
+                                   backend=args.backend,
+                                   shard_clients=args.shard_clients,
+                                   n_clients=args.n_clients))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

@@ -56,5 +56,20 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def client_axes(mesh) -> tuple:
+    """Axes the round engine's *stacked client* dimension shards over:
+    the dedicated ``pod`` axis on multi-pod meshes (one simulated client
+    per pod slice), else the ``data`` axis.  launch/sharding.py builds
+    the explicit client-axis NamedShardings from this."""
+    return ("pod",) if "pod" in mesh.axis_names else ("data",)
+
+
+def client_axis_size(mesh) -> int:
+    size = 1
+    for a in client_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
 def model_axis_size(mesh) -> int:
     return mesh.shape["model"]

@@ -36,6 +36,35 @@ def _div(n: int, m: int) -> bool:
     return n % m == 0
 
 
+# --------------------------------------------------------------------------- #
+# Stacked-client-axis shardings (round engine + fed_round dry-run)
+# --------------------------------------------------------------------------- #
+def client_spec(mesh, ndim: int) -> P:
+    """PartitionSpec putting a leading stacked-client axis on the mesh's
+    client axes (launch/mesh.client_axes) and replicating the rest."""
+    from repro.launch.mesh import client_axes
+    return P(client_axes(mesh), *([None] * (ndim - 1)))
+
+
+def client_shardings(mesh, tree):
+    """Mirror-structured NamedSharding tree for client-stacked arrays
+    (leaves have the client dimension leading)."""
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, client_spec(mesh, x.ndim)), tree)
+
+
+def shard_client_tree(mesh, tree):
+    """Place a client-stacked tree with explicit client-axis
+    NamedShardings; no-op when the stack size does not divide the
+    client-axis extent (e.g. a small rank bucket), so callers can apply
+    it unconditionally."""
+    from repro.launch.mesh import client_axis_size
+    leaves = jax.tree.leaves(tree)
+    if not leaves or leaves[0].shape[0] % max(client_axis_size(mesh), 1):
+        return tree
+    return jax.device_put(tree, client_shardings(mesh, tree))
+
+
 class ShardingPolicy:
     def __init__(self, mesh, cfg):
         self.mesh = mesh

@@ -13,7 +13,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, PrivacyConfig, ShapeConfig
 from repro.core import fed_spmd
+from repro.core import round_program
 from repro.configs.base import FedConfig
+from repro.launch import mesh as mesh_mod
 from repro.launch import specs as specs_mod
 from repro.launch.sharding import ShardingPolicy
 from repro.core import tasks
@@ -132,11 +134,23 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                          n_clients: int = 2, n_local_steps: int = 1,
                          remat: str = "full", lora_rank: int = LORA_RANK,
                          framework: str = "fedllm",
-                         privacy: PrivacyConfig = None):
-    """Multi-pod federated round for any of the three frameworks:
-    clients on the ``pod`` axis, server aggregation as a cross-pod
-    all-reduce (DESIGN SS2, core/fed_spmd.py).  ``framework`` selects the
-    FedLLM FedAvg round, the KD knowledge round, or the Split round.
+                         privacy: PrivacyConfig = None,
+                         shard_clients: bool = False):
+    """Multi-pod federated round for any of the three frameworks, built
+    from the SAME stage-specs the runtime pipeline runs
+    (core/round_program.FrameworkProgram.spmd_round): clients on the
+    mesh's client axes, server aggregation as a cross-client all-reduce
+    (DESIGN SS2, core/fed_spmd.py).  ``framework`` selects the FedLLM
+    FedAvg round, the KD knowledge round, or the Split round.
+
+    ``shard_clients`` shards the stacked client axis over
+    launch/mesh.client_axes (the ``pod`` axis on multi-pod meshes, the
+    ``data`` axis otherwise) with explicit NamedShardings — the
+    mesh-sharded SPMD path the runtime's SpmdExecutor uses given a
+    mesh.  Without it, only a multi-pod mesh's ``pod`` axis carries the
+    client dimension (the pre-refactor behavior).  For Split the client
+    axis is *scanned* (shared server half), so the constraint pins the
+    stacked client halves feeding the closing cc2 reduction instead.
 
     ``privacy`` threads PrivacyConfig into the lowered round: per-example
     DP-SGD clipping inside the local update (the fused clip kernel is in
@@ -177,7 +191,8 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
     weights_shape = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
 
     param_sh = policy.tree_shardings(params_shape)
-    pod = ("pod",) if "pod" in mesh.axis_names else ()
+    pod = mesh_mod.client_axes(mesh) if shard_clients else (
+        ("pod",) if "pod" in mesh.axis_names else ())
     client_spec = lambda x: policy.named(P(pod, *([None] * x.ndim)))
     slt_sh = jax.tree.map(client_spec, lt_shape)
     sopt_sh = jax.tree.map(client_spec, opt_shape)
@@ -186,8 +201,12 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
     weights_sh = policy.named(P(pod))
 
     def _batch_sh(batch_shape, client_axis=pod):
+        # the per-step batch dim can reuse ``data`` only when the client
+        # axis doesn't already occupy it (shard_clients on a single-pod
+        # mesh puts clients on ``data``)
+        inner = ("data",) if "data" not in tuple(client_axis or ()) else None
         return jax.tree.map(lambda x: policy.named(P(
-            client_axis, None, ("data",) if x.shape[2] % max(
+            client_axis, None, inner if inner and x.shape[2] % max(
                 mesh.shape["data"], 1) == 0 else None,
             *([None] * (x.ndim - 3)))), batch_shape)
 
@@ -208,12 +227,14 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
         sopt_sh=sopt_sh, keys_sh=keys_sh, valid_sh=valid_sh,
         weights_sh=weights_sh, stacked_batch=_stacked_batch,
         batch_sh=_batch_sh, privacy=privacy,
-        client_keys_shape=client_keys_shape, ckeys_sh=ckeys_sh)
+        client_keys_shape=client_keys_shape, ckeys_sh=ckeys_sh,
+        shard_clients=shard_clients)
 
     if framework == "fedllm":
         fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA,
                         privacy=privacy)
-        round_step = fed_spmd.make_spmd_round(model, fed, task="generative")
+        round_step = round_program.FedLLMProgram.spmd_round(
+            model, fed, task="generative")
         batch_shape = _stacked_batch(False)
         args = (params_shape, slt_shape, sopt_shape, batch_shape,
                 keys_shape, valid_shape, weights_shape)
@@ -232,48 +253,20 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 
 def _build_kd_round(ctx):
-    """KD-FedLLM round core: vmapped b1 local update, batched b2 public
-    logits, b4 client-axis knowledge reduction, b5 server distillation,
-    b6 global logits and vmapped b8 client distillation — one program.
-    Classification task keeps the exchanged knowledge at n_classes dims
-    (paper SSIII.B's framing of why KD favors classification)."""
-    from repro.core import kd as kd_mod
-    from repro.core.fedavg import make_fns
-
-    model, policy, shape = ctx.model, ctx.policy, ctx.shape
+    """KD-FedLLM round: one program from the KD stage-spec
+    (core/round_program.KDProgram.spmd_round — vmapped b1 local update,
+    batched b2 public logits, b4 client-axis knowledge reduction, b5
+    server distillation, b6 global logits and vmapped b8 client
+    distillation).  Classification task keeps the exchanged knowledge at
+    n_classes dims (paper SSIII.B's framing of why KD favors
+    classification)."""
+    policy, shape = ctx.policy, ctx.shape
     fed = FedConfig(framework="kd", lora_rank=ctx.lora_rank,
                     lora_alpha=LORA_ALPHA, lora_dropout=0.0,
                     privacy=ctx.privacy)
-    fns = make_fns(model, fed, task="classification")
-    local_update = fed_spmd.make_local_update(model, fed,
-                                              task="classification")
     noised = ctx.privacy.noise_std > 0.0
-
-    def kd_round_core(base, slt, sopt, server_lt, server_opt, batches,
-                      keys, valid, weights, public_batch, client_keys,
-                      server_key, noise_keys=None):
-        slt, sopt, _ = jax.vmap(
-            local_update, in_axes=(None, 0, 0, 0, 0, 0))(
-                base, slt, sopt, batches, keys, valid)
-        logits = jax.vmap(fns["logits_fn"], in_axes=(None, 0, None))(
-            base, slt, public_batch)                       # (C, Bp, D)
-        if fed.privacy.dp_enabled:
-            # b3 mechanism: per-client row-clipped noisy knowledge
-            from repro.privacy import dp as dp_mod
-            if noised:
-                logits = jax.vmap(
-                    lambda lg, k: dp_mod.privatize_rows(lg, k, fed))(
-                        logits, noise_keys)
-            else:
-                logits = dp_mod.privatize_rows(logits, None, fed)
-        teacher = kd_mod.aggregate_knowledge_batched(logits, weights)
-        server_lt, server_opt, _ = fns["kd_step"](
-            base, server_lt, server_opt, public_batch, teacher, server_key)
-        glob = fns["logits_fn"](base, server_lt, public_batch)
-        slt, sopt, _ = jax.vmap(
-            fns["kd_step"], in_axes=(None, 0, 0, None, None, 0))(
-                base, slt, sopt, public_batch, glob, client_keys)
-        return slt, sopt, server_lt, server_opt
+    kd_round_core = round_program.KDProgram.spmd_round(
+        ctx.model, fed, task="classification")
 
     batch_shape = ctx.stacked_batch(True)
     public_shape = {
@@ -308,9 +301,14 @@ def _build_kd_round(ctx):
 
 
 def _build_split_round(ctx):
-    """Split-FedLLM round: stacked client halves, shared server half
-    scanned over the client axis, closing client-axis FedAvg."""
+    """Split-FedLLM round from the Split stage-spec: stacked client
+    halves, shared server half scanned over the client axis, closing
+    client-axis FedAvg.  With ``shard_clients`` the stacked client
+    halves feeding the cc2 reduction are pinned to the mesh's client
+    axes (the scan axis itself cannot shard — the server carry is
+    sequential by the paper's schedule)."""
     from repro.core import split as split_mod
+    from repro.launch.sharding import client_spec
 
     model, policy = ctx.model, ctx.policy
     fed = FedConfig(framework="split", lora_rank=ctx.lora_rank,
@@ -318,9 +316,12 @@ def _build_split_round(ctx):
                     privacy=ctx.privacy)
     sfns = split_mod.make_split_fns(model, fed, task="generative")
     L = sfns["n_client_groups"]
-    round_step = fed_spmd.make_split_spmd_round(model, fed,
-                                                task="generative",
-                                                sfns=sfns)
+    client_sharding = (
+        lambda nd: policy.named(client_spec(ctx.mesh, nd))) \
+        if ctx.shard_clients else None
+    round_step = round_program.SplitProgram.spmd_round(
+        model, fed, task="generative", sfns=sfns,
+        client_sharding=client_sharding)
     enc_dec = ctx.cfg.is_encoder_decoder
     base_c_shape, base_s_shape = jax.eval_shape(
         lambda b: split_mod.split_base(b, L, enc_dec), ctx.params_shape)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
+from repro.core.rng import fold_chain
 
 _STREAM = 0x5EC7  # domain separator: privacy noise vs fed/dropout seeds
 
@@ -33,16 +34,14 @@ _STREAM = 0x5EC7  # domain separator: privacy noise vs fed/dropout seeds
 def _run_key(fed: FedConfig):
     """Root of the privacy noise stream: (fed.seed, privacy.seed) each
     folded in separately, so distinct config pairs can never collide."""
-    key = jax.random.fold_in(jax.random.PRNGKey(fed.seed), _STREAM)
-    return jax.random.fold_in(key, fed.privacy.seed)
+    return fold_chain(jax.random.PRNGKey(fed.seed), _STREAM,
+                      fed.privacy.seed)
 
 
 def noise_key(fed: FedConfig, rnd: int, ci: int, step: int = 0):
     """Per-(round, client[, step]) noise key — identical on every
-    execution backend by construction (pure fold_in chain)."""
-    key = jax.random.fold_in(_run_key(fed), rnd)
-    key = jax.random.fold_in(key, ci)
-    return jax.random.fold_in(key, step)
+    execution backend by construction (core/rng.fold_chain)."""
+    return fold_chain(_run_key(fed), rnd, ci, step)
 
 
 def noise_key_grid(fed: FedConfig, rnd: int, cis, n_steps: int):

@@ -152,6 +152,46 @@ def test_client_ranks_validation(case_study):
         run_federated(cfg, too_big, pub, clients, te, batch_size=16)
 
 
+# --------------------------------------------------------------------------- #
+# Cross-engine golden-parity matrix (unified RoundProgram pipeline):
+# sequential vs spmd vs async(max_staleness=0), per framework, from one
+# shared fixture — identical CommLedger bytes, fp32-tolerant metrics.
+# --------------------------------------------------------------------------- #
+def test_engine_matrix_golden_parity(both_backends, case_study):
+    fw, seq, spmd = both_backends
+    cfg, pub, clients, te = case_study
+    fed = FedConfig(framework=fw, n_clients=3, rounds=2, lora_rank=4,
+                    lora_dropout=0.0, split_layer=2, kd_epochs=1, seed=0,
+                    aggregation="async", max_staleness=0)
+    engines = {
+        "async-seq": run_federated(cfg, fed, pub, clients, te,
+                                   batch_size=16, eval_batch=64),
+        "async-spmd": run_federated(
+            cfg, dataclasses.replace(fed, backend="spmd"), pub, clients,
+            te, batch_size=16, eval_batch=64),
+    }
+    for name, res in engines.items():
+        key = (fw, name)
+        # one pipeline -> one ledger, byte-for-byte
+        assert res.ledger.per_round() == seq.ledger.per_round(), key
+        assert res.ledger.by_name() == seq.ledger.by_name(), key
+        assert res.ledger.per_client_round() == \
+            seq.ledger.per_client_round(), key
+        np.testing.assert_array_equal(np.asarray(res.client_flops),
+                                      np.asarray(seq.client_flops),
+                                      err_msg=str(key))
+        for ha, hs in zip(res.history, seq.history):
+            assert abs(ha.loss - hs.loss) <= 1e-3, key
+            assert abs(ha.accuracy - hs.accuracy) <= 1e-3, key
+    # the sequential async(0) engine collapses onto sync EXACTLY
+    for ha, hs in zip(engines["async-seq"].history, seq.history):
+        assert ha.loss == hs.loss, fw
+        assert ha.accuracy == hs.accuracy, fw
+    # spmd sync agrees with spmd async(0) within fp32 tolerance too
+    for ha, hp in zip(engines["async-spmd"].history, spmd.history):
+        assert abs(ha.loss - hp.loss) <= 1e-3, fw
+
+
 def test_unknown_backend_rejected(case_study):
     cfg, pub, clients, te = case_study
     fed = FedConfig(framework="fedllm", backend="async")

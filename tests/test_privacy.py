@@ -357,15 +357,74 @@ def test_accountant_edge_cases():
     assert math.isinf(acct.epsilon(1))
     with pytest.raises(ValueError, match="delta"):
         GaussianAccountant(1.0, delta=2.0)
+    with pytest.raises(ValueError, match="sample_rate"):
+        GaussianAccountant(1.0, sample_rate=0.0)
+    with pytest.raises(ValueError, match="sample_rate"):
+        GaussianAccountant(1.0, sample_rate=1.5)
+    # a subsampled accountant needs integer orders >= 2 in the grid
+    with pytest.raises(ValueError, match="integer order"):
+        GaussianAccountant(1.0, orders=(1.5, 2.5), sample_rate=0.5)
+    # ...but a fractional-only grid is fine at q = 1 (never consulted)
+    assert GaussianAccountant(1.0, orders=(1.5, 2.5)).epsilon(1) > 0
+
+
+# --------------------------------------------------------------------------- #
+# Subsampling amplification (sampled Gaussian mechanism, MTZ'19 bound)
+# --------------------------------------------------------------------------- #
+def test_subsampled_rdp_matches_closed_form():
+    """The log-space implementation equals a literal evaluation of the
+    closed-form MTZ sum  1/(a-1) * log(sum_k C(a,k)(1-q)^(a-k) q^k
+    exp((k^2-k)/(2 sigma^2)))  wherever the latter stays finite."""
+    from repro.privacy.accountant import subsampled_gaussian_rdp
+
+    for sigma in (0.8, 1.0, 2.0):
+        for q in (0.01, 0.1, 0.25):
+            for a in (2, 3, 5, 8, 16):
+                direct = sum(
+                    math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+                    * math.exp((k * k - k) / (2.0 * sigma ** 2))
+                    for k in range(a + 1))
+                want = math.log(direct) / (a - 1)
+                got = subsampled_gaussian_rdp(a, sigma, q)
+                assert got == pytest.approx(want, rel=1e-12), (sigma, q, a)
+
+
+def test_subsampled_rdp_reduces_to_gaussian_at_q1():
+    from repro.privacy.accountant import (gaussian_rdp,
+                                          subsampled_gaussian_rdp)
+
+    for sigma in (0.5, 1.0, 2.0):
+        for a in (2, 4, 32):
+            assert subsampled_gaussian_rdp(a, sigma, 1.0) == \
+                pytest.approx(gaussian_rdp(a, sigma))
+
+
+def test_subsampled_epsilon_monotone_in_q_and_amplifies():
+    """Less data seen per release -> smaller epsilon; the q=1 limit is
+    the plain Gaussian composition."""
+    full = GaussianAccountant(1.0, delta=1e-5)
+    eps = [GaussianAccountant(1.0, delta=1e-5, sample_rate=q).epsilon(10)
+           for q in (0.05, 0.2, 0.5, 1.0)]
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+    assert eps[-1] == full.epsilon(10)
+    assert eps[0] < full.epsilon(10) / 3
 
 
 def test_epsilon_reported_per_round(small_case):
+    """The engines report the subsampling rate q = batch / |local data|
+    to the accountant (8 / 32 on this fixture), so the per-round epsilon
+    matches a subsampled accountant at exactly that rate."""
     fed = _fed(rounds=2, privacy=DP)
     res = _run(fed, small_case)
     eps = [h.epsilon for h in res.history]
     assert eps[0] > 0 and eps[1] > eps[0]
-    acct = GaussianAccountant(DP.dp_noise_multiplier, DP.dp_delta)
+    q = 8 / len(small_case[1][0]["tokens"])
+    acct = GaussianAccountant(DP.dp_noise_multiplier, DP.dp_delta,
+                              sample_rate=q)
     assert eps[0] == acct.epsilon(1) and eps[1] == acct.epsilon(2)
+    # amplification: the subsampled figure beats the q=1 composition
+    full = GaussianAccountant(DP.dp_noise_multiplier, DP.dp_delta)
+    assert eps[0] < full.epsilon(1)
     # plain runs report 0 (no DP, no accounting, no claim)...
     assert all(h.epsilon == 0.0 for h in _run(_fed(), small_case).history)
     # ...while clip-without-noise reports inf (active, no guarantee)

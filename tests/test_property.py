@@ -167,3 +167,47 @@ def test_wkv_no_decay_is_cumsum(S, D, seed):
         np.testing.assert_allclose(np.asarray(y[0, t, 0]), expect,
                                    rtol=2e-3, atol=2e-3)
         S_run += np.outer(np.asarray(k[0, t, 0]), np.asarray(v[0, t, 0]))
+
+
+# --------------------------------------------------------------------------- #
+# Heterogeneous-rank normalization: the single helper behind every
+# rank-dependent code path (core/heterogeneous.normalize_ranks)
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_normalize_ranks_properties(n_clients, lora_rank, seed):
+    from repro.core import fed_spmd
+    from repro.core.heterogeneous import normalize_ranks
+
+    rng = np.random.default_rng(seed)
+    # empty/None -> every client at the global rank
+    assert normalize_ranks(None, n_clients, lora_rank) == \
+        [lora_rank] * n_clients
+    assert normalize_ranks((), n_clients, lora_rank) == \
+        [lora_rank] * n_clients
+    # valid assignment passes through as a list
+    ranks = tuple(int(r) for r in rng.integers(1, lora_rank + 1, n_clients))
+    out = normalize_ranks(ranks, n_clients, lora_rank)
+    assert out == list(ranks)
+    assert all(1 <= r <= lora_rank for r in out)
+    # degenerate lengths: shorter AND longer both rejected
+    with pytest.raises(ValueError, match="entries"):
+        normalize_ranks(ranks + (1,), n_clients, lora_rank)
+    if n_clients > 1:
+        with pytest.raises(ValueError, match="entries"):
+            normalize_ranks(ranks[:-1], n_clients, lora_rank)
+    # out-of-range ranks rejected (never exceed the global rank)
+    with pytest.raises(ValueError, match="lora_rank"):
+        normalize_ranks((lora_rank + 1,) + ranks[1:], n_clients, lora_rank)
+    with pytest.raises(ValueError, match="lora_rank"):
+        normalize_ranks((0,) + ranks[1:], n_clients, lora_rank)
+    # all-equal ranks collapse to ONE bucket and ONE contiguous segment
+    eq = normalize_ranks((lora_rank,) * n_clients, n_clients, lora_rank)
+    assert fed_spmd.rank_buckets(eq) == [(lora_rank, list(range(n_clients)))]
+    assert fed_spmd.rank_segments(eq) == \
+        [(lora_rank, list(range(n_clients)))]
+    # bucketing partitions the client set, order preserved within buckets
+    buckets = fed_spmd.rank_buckets(out)
+    got = sorted(ci for _, cis in buckets for ci in cis)
+    assert got == list(range(n_clients))
+    for _, cis in buckets:
+        assert cis == sorted(cis)
