@@ -266,8 +266,26 @@ class FedConfig:
     #   spmd       — clients stacked on a leading axis, one jitted
     #                program per round (core/fed_spmd.py); client axis
     #                shardable over a multi-pod mesh's ``pod`` dim
-    backend: str = "sequential"      # sequential | spmd
+    #   cohort     — cohort-streaming: the round's clients stream
+    #                through the SPMD stage programs ``cohort_size`` at
+    #                a time with jitted partial-aggregate folds between
+    #                chunks, so peak memory is one cohort (the
+    #                million-virtual-client path)
+    backend: str = "sequential"      # sequential | spmd | cohort
     n_clients: int = 3
+    # cohort-streaming knobs (backend="cohort"; core/round_program.py):
+    #   cohort_size        — clients materialized/stacked per chunk
+    #                        (0 = the whole ready set in one chunk)
+    #   n_virtual_clients  — declared fleet size when clients come from
+    #                        a lazy ClientPopulation (0 = len(clients));
+    #                        validated against the supplied population
+    #   n_edges            — edge aggregators of the two-hop hierarchy
+    #                        (client -> edge -> server); 0 derives the
+    #                        count from the mesh (one edge per pod),
+    #                        1 = flat single-hop accounting
+    cohort_size: int = 0
+    n_virtual_clients: int = 0
+    n_edges: int = 0
     rounds: int = 10
     local_epochs: int = 1
     # PEFT

@@ -167,6 +167,41 @@ def weighted_client_mean(stacked_tree, weights):
     return jax.tree.map(mean, stacked_tree)
 
 
+def hierarchical_client_mean(stacked_tree, weights, n_edges: int):
+    """FedAvg as the two-hop reduction of a real cross-device topology:
+    the client axis is reshaped to (edges, clients_per_edge), each edge
+    reduces its own clients to a weighted partial sum (a per-pod
+    ``psum`` when the client axis is sharded over the mesh's ``pod``
+    axis — the per-edge slice is pod-local by construction), and the
+    per-edge partials fold through a pairwise halving tree (log2(edges)
+    cross-pod combine steps, unrolled at trace time).
+
+    Numerically this reassociates the fp32 accumulation of
+    ``weighted_client_mean`` — same normalized weights, same fp32
+    accum, fp32-tolerant agreement — while lowering to the per-pod
+    reduce + cross-pod tree the hierarchical topology actually runs.
+    Degenerates to the flat reduction when ``n_edges <= 1`` or the
+    client count doesn't tile the edges."""
+    C = weights.shape[0]
+    if n_edges <= 1 or C % n_edges:
+        return weighted_client_mean(stacked_tree, weights)
+    w = weights.astype(jnp.float32)
+    w = w / w.sum()
+    we = w.reshape(n_edges, C // n_edges)
+
+    def mean(x):
+        xe = x.reshape((n_edges, C // n_edges) + x.shape[1:])
+        wx = we.reshape(we.shape + (1,) * (x.ndim - 1))
+        part = (wx * xe.astype(jnp.float32)).sum(axis=1)   # per-edge psum
+        while part.shape[0] > 1:                           # cross-edge tree
+            m = part.shape[0] // 2
+            part = jnp.concatenate(
+                [part[:m] + part[m:2 * m], part[2 * m:]], axis=0)
+        return part[0].astype(x.dtype)
+
+    return jax.tree.map(mean, stacked_tree)
+
+
 # --------------------------------------------------------------------------- #
 # Shared local-update machinery (FedLLM a2 / KD b1)
 # --------------------------------------------------------------------------- #
@@ -212,7 +247,7 @@ def make_bucket_update(model: Model, fed: FedConfig,
 # 1) FedLLM round (a1-a4)
 # --------------------------------------------------------------------------- #
 def make_spmd_round(model: Model, fed: FedConfig,
-                    task: str = "classification"):
+                    task: str = "classification", n_edges: int = 1):
     """Returns round_step(base, stacked_lt, stacked_opt, batches, keys,
     valid, weights[, noise_keys]) where stacked_* have a leading client
     axis C and ``batches`` leaves are (C, n_steps, B, ...).  Output LoRA
@@ -226,7 +261,12 @@ def make_spmd_round(model: Model, fed: FedConfig,
     is one key per client slot (privacy/dp.noise_key — the same keys
     the sequential backend folds in), and the DP payload noise is added
     to every client's tree *before* the client-axis FedAvg, mirroring
-    the a3 upload boundary."""
+    the a3 upload boundary.
+
+    ``n_edges > 1`` swaps the closing a4 reduction for the two-hop
+    ``hierarchical_client_mean`` — per-edge (per-pod) partial sums
+    feeding a cross-edge pairwise tree — matching the client -> edge ->
+    server topology the launch layer compiles on multi-pod meshes."""
     local_update = make_local_update(model, fed, task)
     noise_std = fed.privacy.noise_std
 
@@ -241,7 +281,9 @@ def make_spmd_round(model: Model, fed: FedConfig,
                 lambda t, k: dp_mod.privatize_tree(t, k, noise_std))(
                     new_lt, noise_keys)
         # a4: weighted FedAvg == client-axis reduction -> all-reduce
-        avg = weighted_client_mean(new_lt, weights)
+        # (or the per-pod psum + cross-pod tree when edges are in play)
+        avg = hierarchical_client_mean(new_lt, weights, n_edges) \
+            if n_edges > 1 else weighted_client_mean(new_lt, weights)
         # a1 of the next round: broadcast back to every client slot
         C = jax.tree.leaves(stacked_lt)[0].shape[0]
         redist = jax.tree.map(

@@ -19,31 +19,53 @@ from repro.configs.base import FedConfig, ModelConfig
 UP = "up"          # client -> server
 DOWN = "down"      # server -> client
 
+# Hops of the aggregation topology.  The flat (single-hop) engines
+# record everything on ``client_server``; the hierarchical path of the
+# cohort-streaming executor records per-client traffic on
+# ``client_edge`` (same names, same shape-derived bytes — Fig. 4's
+# per-client accounting is hop-invariant by construction) plus per-edge
+# ``edge_server`` aggregate/broadcast events, so the two-hop topology's
+# wire cost is reported separately per hop.
+CLIENT_SERVER = "client_server"
+CLIENT_EDGE = "client_edge"
+EDGE_SERVER = "edge_server"
+
 # Ledger event names that are privacy *overhead* rather than model
 # payload: secure-agg key/share exchange, dropout-recovery shares, and
 # per-release DP metadata (clip bound, noise scale, seed id).  Fig. 4's
 # privacy-overhead column and the bit-exactness tests filter on these.
 PRIVACY_NAMES = ("secagg_keys", "secagg_recovery", "dp_meta")
+# Edge-infrastructure event names (hierarchical aggregation overlay):
+# like PRIVACY_NAMES these are topology overhead, not client payload,
+# and parity comparisons filter them via ``payload_view``.
+EDGE_NAMES = ("edge_agg",)
 DP_META_BYTES = 12   # fp32 clip + fp32 sigma + int32 stream id
 
 
 @dataclasses.dataclass
 class CommEvent:
     round: int
-    client: int
+    client: int          # negative ids denote edge aggregators
     name: str            # e.g. "lora_params", "logits", "activations"
     direction: str
     bytes: int
+    hop: str = CLIENT_SERVER
 
 
 class CommLedger:
     def __init__(self):
         self.events: List[CommEvent] = []
+        # hop stamped on records that don't name one — the streaming
+        # driver flips this to CLIENT_EDGE under hierarchical
+        # aggregation so every stage hook reports the right hop without
+        # per-program threading
+        self.default_hop = CLIENT_SERVER
 
     def record(self, rnd: int, client: int, name: str, direction: str,
-               nbytes: int):
+               nbytes: int, hop: Optional[str] = None):
         self.events.append(CommEvent(rnd, client, name, direction,
-                                     int(nbytes)))
+                                     int(nbytes),
+                                     hop or self.default_hop))
 
     def record_batch(self, rnd: int, name: str, direction: str,
                      client_bytes: "List[int]"):
@@ -86,7 +108,10 @@ class CommLedger:
         return dict(out)
 
     def mean_client_bytes_per_round(self) -> float:
-        pcr = self.per_client_round()
+        # edge aggregators (negative ids) are infrastructure, not
+        # clients — Fig. 4's per-client mean excludes their traffic
+        pcr = {k: v for k, v in self.per_client_round().items()
+               if k[1] >= 0}
         return sum(pcr.values()) / max(len(pcr), 1)
 
     def privacy_overhead_bytes(self) -> int:
@@ -97,6 +122,30 @@ class CommLedger:
         """Events net of privacy overhead — what the non-private engines
         would have recorded (the bit-exactness comparison surface)."""
         return [e for e in self.events if e.name not in PRIVACY_NAMES]
+
+    # -- hop accounting (hierarchical aggregation) ----------------------- #
+    def by_hop(self, direction: Optional[str] = None) -> Dict[str, int]:
+        out = collections.defaultdict(int)
+        for e in self.events:
+            if direction is None or e.direction == direction:
+                out[e.hop] += e.bytes
+        return dict(out)
+
+    def hop_total(self, hop: str, direction: Optional[str] = None) -> int:
+        return sum(e.bytes for e in self.events if e.hop == hop
+                   and (direction is None or e.direction == direction))
+
+    def payload_view(self) -> "CommLedger":
+        """A ledger holding only model-payload events — privacy AND
+        edge-infrastructure overhead filtered out.  The comparison
+        surface for executor golden parity: the cohort-streaming /
+        hierarchical paths must report the same per-client payload
+        bytes as the flat engines, whatever extra overhead categories
+        they add."""
+        view = CommLedger()
+        view.events = [e for e in self.events
+                       if e.name not in PRIVACY_NAMES + EDGE_NAMES]
+        return view
 
 
 def tree_bytes(tree) -> int:

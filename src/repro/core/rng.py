@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def fold_chain(key, *vals):
@@ -31,6 +32,24 @@ def fold_chain(key, *vals):
     for v in vals:
         key = jax.random.fold_in(key, v)
     return key
+
+
+def host_fold_rng(seed: int, *vals) -> np.random.Generator:
+    """Host-side counterpart of ``fold_chain``: a numpy ``Generator``
+    seeded by folding ``vals`` into ``PRNGKey(seed)`` and reading the
+    resulting key data out as the seed sequence.
+
+    The derivation is order-sensitive and collision-resistant the same
+    way the device streams are, so host-side per-entity randomness (a
+    virtual client's data shard, for instance) is bit-stable no matter
+    which order — or how many times — entities are materialized."""
+    key = fold_chain(jax.random.PRNGKey(int(seed)), *(int(v) for v in vals))
+    try:
+        data = jax.random.key_data(key)
+    except Exception:        # legacy uint32 key arrays on older jax
+        data = key
+    words = np.asarray(data, dtype=np.uint32).ravel().tolist()
+    return np.random.default_rng(words)
 
 
 def local_rng(fed, rnd: int, ci: int):

@@ -25,7 +25,16 @@ and the combination axes are orthogonal pieces composed by
   mesh, the SPMD executor places the stacked client axis on the mesh's
   client axes with explicit NamedShardings (launch/sharding.py) — the
   client dimension of a real run shards over the pod/data axes, not
-  just in the dry-run.
+  just in the dry-run.  ``cohort`` (CohortStreamingExecutor) is the
+  million-virtual-client path: the round's ready set streams through
+  the same SPMD stage programs ``FedConfig.cohort_size`` clients at a
+  time, jitted donated-buffer folds carry the partial aggregates
+  (weighted param/logit sums, ledger counters, per-chunk secure-agg
+  cohorts) between chunks, and clients come from a lazy
+  ``data/population.ClientPopulation`` — peak memory is ONE cohort, no
+  full-fleet array ever exists.  Under a hierarchical topology
+  (``FedConfig.n_edges`` or a multi-pod mesh) the ledger splits wire
+  accounting into client->edge and edge->server hops.
 - A **Schedule** decides when uploads arrive: ``SyncSchedule`` delivers
   in the start round; ``AsyncSchedule`` wraps the seeded
   ``ParticipationSchedule`` delay model (core/async_agg.py) and the
@@ -49,6 +58,7 @@ O(frameworks x backends x aggregation) hand-written drivers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List
 
 import jax
@@ -63,6 +73,7 @@ from repro.core import rng as rng_mod
 from repro.core import split as split_mod
 from repro.core.fedavg import evaluate, make_fns
 from repro.core.heterogeneous import normalize_ranks
+from repro.data import population as population_mod
 from repro.data.loader import epoch_batches
 from repro.peft import lora as lora_lib
 from repro.privacy import dp as dp_mod
@@ -134,22 +145,43 @@ class RoundContext:
                  eval_batch, verbose):
         self.model, self.base, self.cfg, self.fed = model, base, cfg, fed
         self.targets, self.public, self.test = targets, public, test
-        self.clients_data, self.task = clients_data, task
+        # clients_data is a ClientPopulation (eager lists are wrapped at
+        # the run_program boundary): indexable/len-able like the old
+        # lists, but a lazy population materializes a shard only when a
+        # stage actually touches ``clients_data[ci]``
+        self.clients_data = population_mod.as_population(clients_data)
+        self.task = task
         self.batch_size, self.eval_batch = batch_size, eval_batch
         self.verbose = verbose
-        self.n_clients = len(clients_data)
+        self.n_clients = len(self.clients_data)
         self.fns = make_fns(model, fed, task)
         self.ranks = normalize_ranks(fed.client_ranks, self.n_clients,
                                      fed.lora_rank)
         self.ledger = M.CommLedger()
         self.history: List[M.RoundMetrics] = []
         self.cost = [M.ClientCost() for _ in range(self.n_clients)]
-        self.data_w = [len(d["tokens"]) for d in clients_data]
+        # per-client sample counts WITHOUT materializing shards (the
+        # population knows its weights; for eager lists this is exactly
+        # the old [len(d["tokens"]) for d in clients_data])
+        self.data_w = self.clients_data.data_weights()
         self.total_w = float(sum(self.data_w))
-        self.acct = make_accountant(fed, sample_rate(clients_data,
-                                                     batch_size))
+        # worst-case subsampling rate from the weights — the arithmetic
+        # twin of ``sample_rate`` that never touches client data
+        self.acct = make_accountant(
+            fed, max(min(1.0, batch_size / max(w, 1))
+                     for w in self.data_w))
         self.secagg = SecureAggSession(fed)
         self.releases = [0] * self.n_clients   # noisy uploads per client
+        # (rnd, ci) -> secure-agg masking-cohort id, populated by the
+        # streaming driver (per-chunk cohorts); empty under the flat
+        # engines, where the masking cohort is keyed by the start round
+        self._cohort_ids: Dict[tuple, int] = {}
+
+    def secagg_start(self, rnd: int, ci: int) -> int:
+        """The secure-agg cohort key for client ``ci``'s job started in
+        ``rnd`` — the per-chunk cohort id under cohort streaming, the
+        start round itself (identity) everywhere else."""
+        return self._cohort_ids.get((rnd, ci), rnd)
 
 
 # --------------------------------------------------------------------------- #
@@ -215,6 +247,7 @@ class SequentialExecutor:
     paper-literal reference and the numerical ground truth."""
 
     backend = "sequential"
+    streaming = False
 
     def __init__(self, ctx: RoundContext, mesh=None):
         self.ctx = ctx                      # mesh ignored: nothing stacked
@@ -307,6 +340,7 @@ class SpmdExecutor:
     pod/data axes in a real run."""
 
     backend = "spmd"
+    streaming = False
 
     def __init__(self, ctx: RoundContext, mesh=None):
         self.ctx = ctx
@@ -460,7 +494,130 @@ def _batched_distill(kfns, base, stacked_lt, stacked_opt, public, teacher,
     return stacked_lt, stacked_opt
 
 
-EXECUTORS = {"sequential": SequentialExecutor, "spmd": SpmdExecutor}
+class CohortStreamingExecutor(SpmdExecutor):
+    """The million-virtual-client executor (``backend="cohort"``): the
+    per-chunk compute IS the SPMD executor's — the driver streams the
+    round's ready set through it ``FedConfig.cohort_size`` clients at a
+    time and folds partial aggregates between chunks with the jitted
+    donated-buffer folds below, so peak memory is one cohort.  jit
+    caches the stacked programs per (chunk size, rank, n_steps)
+    signature, so every full-size chunk reuses one compile."""
+
+    backend = "cohort"
+    streaming = True
+
+
+# -- streaming partial-aggregate folds -------------------------------------- #
+# One jitted fold, accumulator donated: the python loop over cohorts
+# re-uses the accumulator's buffers instead of materializing a new tree
+# per chunk (the "donated-buffer python loop" variant of lax.scan-ing
+# the cohort stream — chunk payloads live on the host, so a scan over
+# them would have to materialize the full fleet first).
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _fold_add(acc, tree, w):
+    w = jnp.asarray(w, jnp.float32)
+    return jax.tree.map(lambda a, x: a + w * x.astype(jnp.float32),
+                        acc, tree)
+
+
+def _fold_zeros(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _cohort_chunks(seq, size: int):
+    """Chunk a client-id/job sequence into cohorts (<=0: one chunk)."""
+    seq = list(seq)
+    if size <= 0 or size >= len(seq):
+        return [seq] if seq else []
+    return [seq[i:i + size] for i in range(0, len(seq), size)]
+
+
+def _cohort_uid(rnd: int, idx: int) -> int:
+    """Unique masking-cohort id for chunk ``idx`` of round ``rnd`` —
+    keys SecureAggSession cohorts and seeds their pairwise masks, so it
+    only needs to be deterministic and collision-free across the run
+    (chunk counts are far below the 1e6 stride)."""
+    return rnd * 1_000_003 + idx
+
+
+def _stream_fold_params(ctx, state, kept, global_tree):
+    """Shared FedLLM/Split streaming a4/cc2 fold: one arrival chunk
+    into the running staleness-weighted parameter sum.  The zeropad
+    hetero path is linear per leaf, so it streams chunk-by-chunk in one
+    fp32 accumulator; svd re-factorization is not, so it buffers the
+    round's arrivals instead (documented O(arrivals-this-round)
+    exception to the one-cohort memory bound)."""
+    from repro.core.async_agg import staleness_weight
+    fed = ctx.fed
+    if not kept:
+        return state
+    if fed.hetero_agg == "svd" and any(r != fed.lora_rank
+                                       for r in ctx.ranks):
+        if state is None:
+            state = ("svd", [])
+        state[1].extend(kept)
+        return state
+    if state is None:
+        state = ("sum", _fold_zeros(global_tree), 0.0, 0.0)
+    _, acc, w_sum, raw = state
+    for ci, tree, s, w in kept:
+        if ctx.ranks[ci] != fed.lora_rank:
+            tree = lora_lib.pad_rank(tree, fed.lora_rank)
+        ws = w * staleness_weight(s, fed.staleness_decay)
+        acc = _fold_add(acc, tree, ws)
+        w_sum += ws
+        raw += w
+    return ("sum", acc, w_sum, raw)
+
+
+def _finalize_param_fold(ctx, state, global_tree):
+    """Close a ``_stream_fold_params`` round: anchor the absent data
+    mass on the current global (the same convex combination
+    ``stale_weighted_avg`` forms) and normalize.  Returns the new
+    global tree — ``global_tree`` untouched when nothing was kept."""
+    if state is None:
+        return global_tree
+    if state[0] == "svd":
+        from repro.core.async_agg import stale_weighted_avg
+        return stale_weighted_avg(global_tree, state[1], ctx.total_w,
+                                  ctx.fed, ctx.ranks)
+    _, acc, w_sum, raw = state
+    absent = ctx.total_w - raw
+    if absent > 0:
+        acc = _fold_add(acc, global_tree, absent)
+        w_sum += absent
+    return jax.tree.map(
+        lambda a, g: (a / np.float32(w_sum)).astype(g.dtype),
+        acc, global_tree)
+
+
+class _LazyClientState:
+    """List-like per-client state materialized on first touch.  The
+    eager engines touch every index up front, reproducing the old
+    list-of-all-clients bit-for-bit; under cohort streaming over a lazy
+    population only participants ever materialize (KD is inherently
+    per-client-stateful — a touched client's adapter IS retained after
+    its cohort, the documented exception to statelessness)."""
+
+    def __init__(self, n: int, factory):
+        self._n = int(n)
+        self._factory = factory
+        self._vals: Dict[int, object] = {}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, ci):
+        if ci not in self._vals:
+            self._vals[ci] = self._factory(ci)
+        return self._vals[ci]
+
+    def __setitem__(self, ci, val):
+        self._vals[ci] = val
+
+
+EXECUTORS = {"sequential": SequentialExecutor, "spmd": SpmdExecutor,
+             "cohort": CohortStreamingExecutor}
 
 
 # --------------------------------------------------------------------------- #
@@ -503,7 +660,7 @@ class FedLLMProgram:
             lt = dp_mod.privatize_tree(lt, dp_mod.noise_key(ctx.fed, rnd,
                                                             ci),
                                        ctx.fed.privacy.noise_std)
-            ctx.secagg.collect(rnd, ci, lt)
+            ctx.secagg.collect(ctx.secagg_start(rnd, ci), ci, lt)
             ctx.releases[ci] += 1
             payloads.append((ci, lt))
         return payloads
@@ -522,6 +679,19 @@ class FedLLMProgram:
                                                 ctx.total_w, ctx.fed,
                                                 ctx.ranks)
 
+    # -- streaming a4 (cohort executor): fold chunks, finalize once --- #
+    def agg_init(self, ctx):
+        return None
+
+    def agg_fold(self, ctx, ex, state, kept, rnd):
+        return _stream_fold_params(ctx, state, kept, self.global_lt)
+
+    def agg_finalize(self, ctx, ex, state, arrived, rnd):
+        self.global_lt = _finalize_param_fold(ctx, state, self.global_lt)
+
+    def edge_payload_bytes(self, ctx) -> int:
+        return M.tree_bytes(self.global_lt)
+
     def evaluate(self, ctx):
         return evaluate(ctx.fns, ctx.base, self.global_lt, ctx.test,
                         ctx.eval_batch)
@@ -530,10 +700,13 @@ class FedLLMProgram:
         return self.global_lt
 
     @staticmethod
-    def spmd_round(model, fed: FedConfig, task: str = "classification"):
+    def spmd_round(model, fed: FedConfig, task: str = "classification",
+                   n_edges: int = 1):
         """The jittable whole-round program for the launch layer: the
-        vmapped local scans plus the client-axis FedAvg all-reduce."""
-        return fed_spmd.make_spmd_round(model, fed, task)
+        vmapped local scans plus the client-axis FedAvg all-reduce —
+        the two-hop per-edge partial sum + cross-edge tree reduce
+        (``fed_spmd.hierarchical_client_mean``) when ``n_edges > 1``."""
+        return fed_spmd.make_spmd_round(model, fed, task, n_edges=n_edges)
 
 
 class KDProgram:
@@ -547,16 +720,23 @@ class KDProgram:
     def __init__(self, ctx: RoundContext):
         fed = ctx.fed
         key = jax.random.PRNGKey(fed.seed + 2)
-        self.lts = [lora_lib.init_lora(jax.random.fold_in(key, ci),
-                                       ctx.base, ctx.targets, ctx.ranks[ci],
-                                       fed.lora_alpha)
-                    for ci in range(ctx.n_clients)]
-        self.opts = [ctx.fns["opt_init"](lt) for lt in self.lts]
+        # per-client adapters/optimizers materialize on first
+        # participation — the same fold_in(key, ci) init as the old
+        # eager lists (bit-identical values), but a million-virtual-
+        # client run only ever allocates the clients that train
+        self.lts = _LazyClientState(
+            ctx.n_clients,
+            lambda ci: lora_lib.init_lora(jax.random.fold_in(key, ci),
+                                          ctx.base, ctx.targets,
+                                          ctx.ranks[ci], fed.lora_alpha))
+        self.opts = _LazyClientState(
+            ctx.n_clients, lambda ci: ctx.fns["opt_init"](self.lts[ci]))
         self.server_lt = lora_lib.init_lora(jax.random.fold_in(key, 999),
                                             ctx.base, ctx.targets,
                                             fed.lora_rank, fed.lora_alpha)
         self.server_opt = ctx.fns["opt_init"](self.server_lt)
-        self.n_lora = [lora_lib.n_params(lt) for lt in self.lts]
+        self.n_lora = _LazyClientState(
+            ctx.n_clients, lambda ci: lora_lib.n_params(self.lts[ci]))
         self.glob = None            # latest global knowledge (b6)
         self.pub_tok = ctx.public["tokens"].size
 
@@ -576,7 +756,7 @@ class KDProgram:
             logits = dp_mod.privatize_logits(
                 logits, dp_mod.noise_key(ctx.fed, rnd, ci), ctx.fed)
             lg, wire = kd_mod.compress_for_wire(logits, ctx.fed)
-            ctx.secagg.collect(rnd, ci, lg)
+            ctx.secagg.collect(ctx.secagg_start(rnd, ci), ci, lg)
             ctx.releases[ci] += 1
             payloads.append((ci, (lg, wire)))
         return payloads
@@ -611,6 +791,56 @@ class KDProgram:
                 ctx.cost[ci].add_train(ctx.cfg, self.pub_tok * fed.kd_epochs,
                                        self.n_lora[ci])
             ex.kd_distill(self, cis, self.glob, rnd)
+
+    # -- streaming b4-b8 (cohort executor) ---------------------------- #
+    def agg_init(self, ctx):
+        return None
+
+    def agg_fold(self, ctx, ex, state, kept, rnd):
+        """Fold one arrival chunk's logits into the running b4 teacher
+        sum (the weighted mean is linear, so it streams exactly)."""
+        from repro.core.async_agg import staleness_weight
+        if not kept:
+            return state
+        if state is None:
+            state = [None, 0.0]
+        acc, w_sum = state
+        for ci, p, s, w in kept:
+            lg = jnp.asarray(p[0])
+            ws = w * staleness_weight(s, ctx.fed.staleness_decay)
+            acc = _fold_add(acc if acc is not None else _fold_zeros(lg),
+                            lg, ws)
+            w_sum += ws
+        return [acc, w_sum]
+
+    def agg_finalize(self, ctx, ex, state, arrived, rnd):
+        """b5 server distill from the normalized teacher, then the
+        b6-b8 re-sync streamed over the arrived clients in cohort-sized
+        chunks (one stacked distill program per chunk)."""
+        fed = ctx.fed
+        if state is not None and state[1] > 0:
+            teacher = (state[0] / np.float32(state[1])).astype(jnp.float32)
+            self.server_lt, self.server_opt, _ = kd_mod.distill(
+                ctx.fns, ctx.base, self.server_lt, self.server_opt,
+                ctx.public, teacher, fed.kd_epochs, ctx.eval_batch,
+                seed=fed.seed + rnd)
+            self.glob = kd_mod.client_logits(ctx.fns, ctx.base,
+                                             self.server_lt, ctx.public,
+                                             ctx.eval_batch)
+        if arrived and self.glob is not None:
+            glob_wire = kd_mod.logit_wire_bytes(self.glob.shape, fed)
+            for chunk in _cohort_chunks(arrived, fed.cohort_size):
+                for ci in chunk:
+                    ctx.ledger.record(rnd, ci, "logits", M.DOWN, glob_wire)
+                    ctx.cost[ci].add_train(ctx.cfg,
+                                           self.pub_tok * fed.kd_epochs,
+                                           self.n_lora[ci])
+                ex.kd_distill(self, chunk, self.glob, rnd)
+
+    def edge_payload_bytes(self, ctx) -> int:
+        if self.glob is None:
+            return 0
+        return kd_mod.logit_wire_bytes(self.glob.shape, ctx.fed)
 
     def evaluate(self, ctx):
         return evaluate(ctx.fns, ctx.base, self.server_lt, ctx.test,
@@ -719,7 +949,7 @@ class SplitProgram:
         # the c2 activation noise is Split's DP mechanism (inside the
         # step); the cc1 adapter upload is masked but not noised
         for ci, c_lt in outs:
-            ctx.secagg.collect(rnd, ci, c_lt)
+            ctx.secagg.collect(ctx.secagg_start(rnd, ci), ci, c_lt)
         return outs
 
     def record_arrival(self, ctx, job, rnd):
@@ -733,6 +963,20 @@ class SplitProgram:
                                                ctx.total_w, ctx.fed,
                                                ctx.ranks)
         self.joined = split_mod.join_lora(self.c_global, self.s_lt)
+
+    # -- streaming cc2 (cohort executor) ------------------------------ #
+    def agg_init(self, ctx):
+        return None
+
+    def agg_fold(self, ctx, ex, state, kept, rnd):
+        return _stream_fold_params(ctx, state, kept, self.c_global)
+
+    def agg_finalize(self, ctx, ex, state, arrived, rnd):
+        self.c_global = _finalize_param_fold(ctx, state, self.c_global)
+        self.joined = split_mod.join_lora(self.c_global, self.s_lt)
+
+    def edge_payload_bytes(self, ctx) -> int:
+        return M.tree_bytes(self.c_global)
 
     def evaluate(self, ctx):
         return evaluate(ctx.fns, ctx.base, self.joined, ctx.test,
@@ -774,6 +1018,18 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
     program = PROGRAMS[fed.framework](ctx)
     ex = EXECUTORS[backend](ctx, mesh)
     schedule = make_schedule(fed, ctx.n_clients)
+    streaming = getattr(ex, "streaming", False)
+    if streaming:
+        from repro.launch import mesh as mesh_lib
+        n_edges = fed.n_edges or mesh_lib.n_edges(mesh)
+    else:
+        n_edges = 1
+    hierarchical = streaming and n_edges > 1
+    if hierarchical:
+        # two-hop topology: every per-client wire event is the first
+        # hop now (client -> its edge aggregator); the edge -> server
+        # hop is charged per live edge after each aggregation below
+        ctx.ledger.default_hop = M.CLIENT_EDGE
     tag = f"{fed.framework}/{backend}" + \
         ("/async" if fed.aggregation == "async" else "")
 
@@ -782,25 +1038,84 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
         # secure-agg masking cohort (payloads are created — and masked —
         # now, even when they deliver rounds later)
         starters = schedule.starters(rnd)
-        ctx.secagg.begin_cohort(ctx.ledger, rnd, starters)
-        jobs = program.broadcast(ctx, starters, rnd)
-        outs = program.local_update(ctx, ex, jobs, rnd)
-        for ci, payload in program.upload(ctx, outs, rnd):
-            schedule.submit(rnd, ci, payload)
+        if streaming:
+            # the ready set streams through the stacked programs one
+            # cohort-sized chunk at a time; each chunk is its own
+            # secure-agg masking cohort so its payloads can be freed
+            # the moment the whole chunk delivers
+            for k, chunk in enumerate(
+                    _cohort_chunks(starters, fed.cohort_size)):
+                cid = _cohort_uid(rnd, k)
+                for ci in chunk:
+                    ctx._cohort_ids[(rnd, ci)] = cid
+                ctx.secagg.begin_cohort(ctx.ledger, rnd, chunk,
+                                        cohort_id=cid)
+                jobs = program.broadcast(ctx, chunk, rnd)
+                outs = program.local_update(ctx, ex, jobs, rnd)
+                for ci, payload in program.upload(ctx, outs, rnd):
+                    schedule.submit(rnd, ci, payload)
+        else:
+            ctx.secagg.begin_cohort(ctx.ledger, rnd, starters)
+            jobs = program.broadcast(ctx, starters, rnd)
+            outs = program.local_update(ctx, ex, jobs, rnd)
+            for ci, payload in program.upload(ctx, outs, rnd):
+                schedule.submit(rnd, ci, payload)
         # arrivals: record wire traffic, drop too-stale updates (their
         # pairwise masks recovered like any absent cohort member's)
-        kept, delivered, arrived = [], [], []
-        for j in schedule.pop_arrivals(rnd):
-            arrived.append(j)
-            program.record_arrival(ctx, j, rnd)
-            s = rnd - j.start
-            if s <= fed.max_staleness:
-                kept.append((j.client, j.payload, s, ctx.data_w[j.client]))
-                delivered.append((j.start, j.client))
-            else:
-                ctx.secagg.discard(j.start, j.client)
-        ctx.secagg.deliver(ctx.ledger, rnd, delivered)
-        program.aggregate(ctx, ex, kept, arrived, rnd)
+        if streaming:
+            # group arrivals by masking cohort (insertion order), fold
+            # each group into the running partial aggregate and free its
+            # secagg payloads before touching the next — peak memory is
+            # one cohort of payloads plus one fp32 accumulator
+            arrivals = schedule.pop_arrivals(rnd)
+            groups: Dict[int, List] = {}
+            for j in arrivals:
+                groups.setdefault(ctx.secagg_start(j.start, j.client),
+                                  []).append(j)
+            state = program.agg_init(ctx)
+            arrived_cis, used_edges = [], set()
+            for gi, (gkey, gjobs) in enumerate(groups.items()):
+                kept_chunk, delivered = [], []
+                for j in gjobs:
+                    arrived_cis.append(j.client)
+                    program.record_arrival(ctx, j, rnd)
+                    s = rnd - j.start
+                    if s <= fed.max_staleness:
+                        kept_chunk.append((j.client, j.payload, s,
+                                           ctx.data_w[j.client]))
+                        delivered.append((gkey, j.client))
+                    else:
+                        ctx.secagg.discard(gkey, j.client)
+                ctx.secagg.deliver(ctx.ledger, rnd, delivered)
+                state = program.agg_fold(ctx, ex, state, kept_chunk, rnd)
+                used_edges.add(gi % n_edges)
+            program.agg_finalize(ctx, ex, state, arrived_cis, rnd)
+            if hierarchical and arrived_cis:
+                # second hop: each edge that aggregated a cohort this
+                # round forwards one fused payload up and pulls the new
+                # global down (negative ids denote edge aggregators)
+                eb = program.edge_payload_bytes(ctx)
+                for e in sorted(used_edges):
+                    ctx.ledger.record(rnd, -(e + 1), "edge_agg", M.UP,
+                                      eb, hop=M.EDGE_SERVER)
+                    ctx.ledger.record(rnd, -(e + 1), "edge_agg", M.DOWN,
+                                      eb, hop=M.EDGE_SERVER)
+            arrived_n = len(arrived_cis)
+        else:
+            kept, delivered, arrived = [], [], []
+            for j in schedule.pop_arrivals(rnd):
+                arrived.append(j)
+                program.record_arrival(ctx, j, rnd)
+                s = rnd - j.start
+                if s <= fed.max_staleness:
+                    kept.append((j.client, j.payload, s,
+                                 ctx.data_w[j.client]))
+                    delivered.append((j.start, j.client))
+                else:
+                    ctx.secagg.discard(j.start, j.client)
+            ctx.secagg.deliver(ctx.ledger, rnd, delivered)
+            program.aggregate(ctx, ex, kept, arrived, rnd)
+            arrived_n = len(arrived)
         acc, loss = program.evaluate(ctx)
         ctx.history.append(M.RoundMetrics(
             rnd, acc, loss, ctx.ledger.mean_client_bytes_per_round(),
@@ -808,7 +1123,7 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
             epsilon=round_epsilon(ctx.acct, max(ctx.releases, default=0))))
         if verbose:
             print(f"[{tag}] round {rnd}: acc={acc:.4f} loss={loss:.4f}"
-                  + (f" arrived={len(arrived)}"
+                  + (f" arrived={arrived_n}"
                      if fed.aggregation == "async" else ""))
     return FedResult(ctx.history, ctx.ledger, program.final_state(ctx),
                      [c.flops for c in ctx.cost])

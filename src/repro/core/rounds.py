@@ -2,7 +2,14 @@
 the three paper frameworks over one shared substrate and records the
 paper's metrics (accuracy, comm bytes, client FLOPs) per round.
 
-    result = run_federated(cfg, fed, public, clients_data, test, ...)
+    result = run_federated(cfg, fed, public, clients, test, ...)
+
+``clients`` is THE way to supply the fleet: a
+``data/population.ClientPopulation`` (lazy — a million-virtual-client
+``DirichletPopulation`` materializes shards per cohort, never the
+fleet) or, via a deprecation shim, the old eager list of per-client
+data dicts (wrapped through ``ClientPopulation.from_clients_data`` with
+a ``DeprecationWarning``).
 
 ``result.history`` is a list of RoundMetrics; ``result.ledger`` has every
 wire transfer; Fig. 3 / Fig. 4 / Table I benchmarks read from these.
@@ -12,22 +19,27 @@ validates the config, builds the model, and hands off to the composable
 pipeline in core/round_program.py, which runs every combination of
 
     framework (fedllm | kd | split)
-    x backend (``FedConfig.backend``: sequential | spmd)
+    x backend (``FedConfig.backend``: sequential | spmd | cohort)
     x aggregation (``FedConfig.aggregation``: sync | async)
 
 through one driver over the canonical stages ``broadcast ->
 local_update -> upload -> aggregate -> evaluate`` with privacy and
-heterogeneous-rank handling applied as middleware.  Both backends
+heterogeneous-rank handling applied as middleware.  All backends
 produce the same ledger bytes exactly and the same accuracy within fp32
-tolerance (tests/test_backend_parity.py).
+tolerance (tests/test_backend_parity.py, tests/test_population.py);
+``cohort`` streams the round ``FedConfig.cohort_size`` clients at a
+time so peak memory is one cohort.
 
 Pass ``mesh=`` (a jax mesh, e.g. launch/mesh.make_production_mesh) to
-let the SPMD backend shard the stacked client axis over the mesh's
-client axes with explicit NamedShardings (launch/sharding.py).
+let the SPMD/cohort backends shard the stacked client axis over the
+mesh's client axes with explicit NamedShardings (launch/sharding.py);
+on a multi-pod mesh the cohort backend also reports hierarchical
+client->edge / edge->server wire accounting.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import warnings
+from typing import Dict, List, Union
 
 import jax
 
@@ -35,6 +47,7 @@ from repro.configs.base import FedConfig, ModelConfig
 from repro.core.heterogeneous import normalize_ranks
 from repro.core.round_program import (FedResult, make_accountant,  # noqa: F401
                                       round_epsilon, run_program)
+from repro.data.population import ClientPopulation
 from repro.models.factory import build_model
 from repro.peft import lora as lora_lib
 
@@ -46,26 +59,57 @@ def client_lora_ranks(fed: FedConfig, n_clients: int) -> List[int]:
     return normalize_ranks(fed.client_ranks, n_clients, fed.lora_rank)
 
 
+def _normalize_clients(clients, clients_data) -> ClientPopulation:
+    """The ``clients`` argument shim: populations pass through; eager
+    lists (including the legacy ``clients_data=`` keyword) keep working
+    for one release behind a DeprecationWarning."""
+    if clients_data is not None:
+        if clients is not None:
+            raise TypeError("pass either clients= or the legacy "
+                            "clients_data=, not both")
+        clients = clients_data
+    if clients is None:
+        raise TypeError("run_federated() missing required argument: "
+                        "'clients'")
+    if isinstance(clients, ClientPopulation):
+        return clients
+    warnings.warn(
+        "passing an eager list of client dicts to run_federated() is "
+        "deprecated; pass a data/population.ClientPopulation (use "
+        "ClientPopulation.from_clients_data(list) to wrap an existing "
+        "list)", DeprecationWarning, stacklevel=3)
+    return ClientPopulation.from_clients_data(clients)
+
+
 def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
-                  clients_data: List[Dict], test: Dict,
+                  clients: Union[ClientPopulation, List[Dict]] = None,
+                  test: Dict = None,
                   task: str = "classification", batch_size: int = 16,
                   eval_batch: int = 64, verbose: bool = False,
-                  mesh=None) -> FedResult:
+                  mesh=None, clients_data: List[Dict] = None) -> FedResult:
+    clients = _normalize_clients(clients, clients_data)
+    if test is None:
+        raise TypeError("run_federated() missing required argument: "
+                        "'test'")
     if fed.framework not in ("fedllm", "kd", "split"):
         raise ValueError(f"unknown framework {fed.framework!r}")
     backend = getattr(fed, "backend", "sequential") or "sequential"
-    if backend not in ("sequential", "spmd"):
+    if backend not in ("sequential", "spmd", "cohort"):
         raise ValueError(f"unknown backend {backend!r} "
-                         "(expected 'sequential' or 'spmd')")
+                         "(expected 'sequential', 'spmd' or 'cohort')")
     if fed.aggregation not in ("sync", "async"):
         raise ValueError(f"unknown aggregation {fed.aggregation!r} "
                          "(expected 'sync' or 'async')")
+    if fed.n_virtual_clients and fed.n_virtual_clients != len(clients):
+        raise ValueError(
+            f"FedConfig.n_virtual_clients={fed.n_virtual_clients} does "
+            f"not match the supplied population ({len(clients)} clients)")
     if fed.privacy.dp_noise_multiplier > 0.0 and fed.privacy.dp_clip <= 0.0:
         raise ValueError(
             "privacy.dp_noise_multiplier > 0 requires privacy.dp_clip > 0 "
             "(the noise stddev is sigma * clip; an unclipped release has "
             "unbounded sensitivity and no (eps, delta) guarantee)")
-    client_lora_ranks(fed, len(clients_data))   # validate early
+    client_lora_ranks(fed, len(clients))   # validate early
     model = build_model(cfg)
     key = jax.random.PRNGKey(fed.seed)
     base = model.init(key)
@@ -77,6 +121,6 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
     from repro.kernels import ops as kernel_ops
     with kernel_ops.policy_scope(cfg.kernel_policy):
         return run_program(model, base, cfg, fed, targets, public,
-                           clients_data, test, task, batch_size,
+                           clients, test, task, batch_size,
                            eval_batch, verbose, backend=backend,
                            mesh=mesh)

@@ -19,26 +19,21 @@ def iid_partition(data: Dict[str, np.ndarray], n_clients: int,
 def dirichlet_partition(data: Dict[str, np.ndarray], n_clients: int,
                         alpha: float = 0.5, seed: int = 0,
                         n_classes: int = 77) -> List[Dict[str, np.ndarray]]:
-    """Label-skewed non-IID split (standard FL benchmark protocol)."""
-    rng = np.random.default_rng(seed)
-    labels = data["labels"]
-    idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
-    client_idx: List[List[int]] = [[] for _ in range(n_clients)]
-    for idxs in idx_by_class:
-        if len(idxs) == 0:
-            continue
-        rng.shuffle(idxs)
-        props = rng.dirichlet(np.full(n_clients, alpha))
-        cuts = (np.cumsum(props) * len(idxs)).astype(int)[:-1]
-        for ci, part in enumerate(np.split(idxs, cuts)):
-            client_idx[ci].extend(part.tolist())
-    out = []
-    for ci in range(n_clients):
-        sel = np.array(sorted(client_idx[ci]), dtype=int)
-        if len(sel) == 0:                      # guarantee non-empty
-            sel = np.array([int(rng.integers(len(labels)))])
-        out.append({k: v[sel] for k, v in data.items()})
-    return out
+    """Label-skewed non-IID split (standard FL benchmark protocol).
+
+    Streaming-safe derivation: each client's shard comes from a seeded
+    fold-in over ``(seed, client)`` (data/population.DirichletPopulation
+    on core/rng.fold_chain) — a per-client Dirichlet(alpha) label
+    distribution sampled with replacement from per-class index pools —
+    instead of the old global shuffle over the full dataset.  Client
+    ``ci``'s shard is therefore O(shard) to materialize and bit-stable
+    no matter which order (or how many) clients are built, which is
+    what lets the same derivation scale to 10^5-10^6 virtual clients
+    under the cohort-streaming executor."""
+    from repro.data.population import DirichletPopulation
+    pop = DirichletPopulation(data, n_clients, alpha=alpha, seed=seed,
+                              n_classes=n_classes)
+    return [pop.client(ci) for ci in range(n_clients)]
 
 
 def label_histogram(data: Dict[str, np.ndarray],

@@ -1,0 +1,188 @@
+"""Client populations: the scale-aware way to hand the round engine its
+clients (ROADMAP: million-client rounds).
+
+A ``ClientPopulation`` is a *spec* for a fleet of virtual clients, not a
+list of materialized shards.  The round engine only ever asks it for
+
+- ``len(pop)`` / ``pop.data_weights()`` — fleet size and per-client
+  sample counts, both O(1) per client with no data materialized;
+- ``pop[ci]`` — ONE client's shard, materialized on demand;
+- ``pop.cohort(rnd, idx)`` — one cohort's clients + shards, the unit the
+  ``CohortStreamingExecutor`` (core/round_program.py) streams through a
+  round so peak memory is a single cohort even at 10^5-10^6 virtual
+  clients.
+
+Two implementations:
+
+- ``EagerPopulation`` wraps today's eager ``clients_data`` lists
+  bit-identically (``ClientPopulation.from_clients_data``) — the
+  deprecation shim in core/rounds.run_federated routes legacy callers
+  through it, so every pre-existing example/test runs unchanged.
+- ``DirichletPopulation`` is the lazy non-IID fleet: client ``ci``'s
+  shard is derived entirely from a seeded fold-in over ``(seed, ci)``
+  (core/rng.host_fold_rng built on ``fold_chain``), drawing a
+  per-client Dirichlet(alpha) label distribution and sampling the shard
+  with replacement from per-class index pools of a small base dataset.
+  Materialization is O(shard) per client and bit-stable regardless of
+  cohort order or how often a client is revisited; no full-fleet array
+  ever exists.
+
+Shards are round-stationary (a client's data does not change between
+rounds), matching the eager-list semantics every golden-parity test
+pins; ``cohort``'s ``rnd`` argument is part of the API so a future
+per-round resampling population can slot in without a signature change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import rng as rng_mod
+
+_POP_STREAM = 0x9E37  # domain separator for per-client shard derivation
+
+
+@dataclasses.dataclass
+class Cohort:
+    """One materialized cohort: global client ids + their shards (in id
+    order).  ``data[k]`` is client ``clients[k]``'s full local shard —
+    the stacked per-cohort batch the SPMD stage-specs consume comes out
+    of core/fed_spmd.stack_client_batches exactly like an eager run."""
+    round: int
+    index: int
+    clients: List[int]
+    data: List[Dict[str, np.ndarray]]
+
+    def __len__(self) -> int:
+        return len(self.clients)
+
+
+class ClientPopulation:
+    """Abstract fleet of ``n_clients`` virtual clients.
+
+    Subclasses implement ``client(ci)`` and ``data_weights()``; the
+    base class provides indexing, iteration, and cohort chunking."""
+
+    n_clients: int = 0
+
+    # -- required ---------------------------------------------------------- #
+    def client(self, ci: int) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+    def data_weights(self) -> List[int]:
+        """Per-client sample counts WITHOUT materializing any shard —
+        the round engine's FedAvg data weights and accountant sampling
+        rates come from here."""
+        raise NotImplementedError
+
+    # -- provided ---------------------------------------------------------- #
+    def __len__(self) -> int:
+        return self.n_clients
+
+    def __getitem__(self, ci: int) -> Dict[str, np.ndarray]:
+        if not (0 <= int(ci) < self.n_clients):
+            raise IndexError(ci)
+        return self.client(int(ci))
+
+    def n_cohorts(self, cohort_size: int) -> int:
+        if cohort_size <= 0:
+            return 1
+        return -(-self.n_clients // cohort_size)
+
+    def cohort(self, rnd: int, idx: int,
+               cohort_size: Optional[int] = None) -> Cohort:
+        """Materialize cohort ``idx`` of the fleet (fixed-size chunks of
+        the client id range; the last cohort may be ragged).  O(cohort)
+        work and memory — the streaming executor's whole contract."""
+        size = cohort_size if cohort_size and cohort_size > 0 \
+            else self.n_clients
+        lo = idx * size
+        if not (0 <= lo < self.n_clients):
+            raise IndexError(f"cohort {idx} of {self.n_cohorts(size)}")
+        cis = list(range(lo, min(lo + size, self.n_clients)))
+        return Cohort(rnd, idx, cis, [self.client(ci) for ci in cis])
+
+    # -- adapters ---------------------------------------------------------- #
+    @staticmethod
+    def from_clients_data(clients_data: Sequence[Dict]) -> "EagerPopulation":
+        """Wrap an eager per-client shard list (the pre-population API)
+        bit-identically — shards are returned by reference, so numerics
+        and ledger bytes cannot move."""
+        return EagerPopulation(list(clients_data))
+
+
+class EagerPopulation(ClientPopulation):
+    """A materialized shard list behind the population interface."""
+
+    def __init__(self, clients_data: List[Dict[str, np.ndarray]]):
+        self._data = clients_data
+        self.n_clients = len(clients_data)
+
+    def client(self, ci: int) -> Dict[str, np.ndarray]:
+        return self._data[ci]
+
+    def data_weights(self) -> List[int]:
+        return [len(d["tokens"]) for d in self._data]
+
+
+class DirichletPopulation(ClientPopulation):
+    """Lazy label-skewed non-IID fleet over a small base dataset.
+
+    Client ``ci``'s shard is fully determined by ``(seed, ci)``:
+
+    1. ``rng = host_fold_rng(seed, _POP_STREAM, ci)``;
+    2. a Dirichlet(``alpha``) distribution over the label classes
+       present in the base data;
+    3. ``shard_size`` samples drawn class-first (multinomial over the
+       class distribution, then with-replacement draws from per-class
+       index pools), finally permuted by the same rng.
+
+    The only precomputed state is the per-class index pools — O(base
+    dataset), shared by every client — so a 10^6-client fleet costs the
+    same resident memory as the base data, and materializing cohort k
+    never touches any other cohort."""
+
+    def __init__(self, base_data: Dict[str, np.ndarray], n_clients: int,
+                 alpha: float = 0.5, seed: int = 0,
+                 shard_size: Optional[int] = None,
+                 n_classes: Optional[int] = None):
+        if n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        self.base = base_data
+        self.n_clients = int(n_clients)
+        self.alpha = float(alpha)
+        self.seed = int(seed)
+        n = len(base_data["tokens"])
+        self.shard_size = int(shard_size) if shard_size \
+            else max(n // self.n_clients, 1)
+        labels = base_data.get("labels")
+        if labels is None:           # unlabeled data: one pseudo-class
+            labels = np.zeros(n, np.int64)
+        limit = int(n_classes) if n_classes else int(labels.max()) + 1
+        pools = [np.where(labels == c)[0] for c in range(limit)]
+        self._classes = [c for c, p in enumerate(pools) if len(p)]
+        self._pools = [pools[c] for c in self._classes]
+
+    def client(self, ci: int) -> Dict[str, np.ndarray]:
+        rng = rng_mod.host_fold_rng(self.seed, _POP_STREAM, ci)
+        props = rng.dirichlet(np.full(len(self._classes), self.alpha))
+        counts = rng.multinomial(self.shard_size, props)
+        sel = np.concatenate([
+            rng.choice(pool, size=k, replace=True)
+            for pool, k in zip(self._pools, counts) if k
+        ])
+        sel = sel[rng.permutation(len(sel))]
+        return {k: v[sel] for k, v in self.base.items()}
+
+    def data_weights(self) -> List[int]:
+        return [self.shard_size] * self.n_clients
+
+
+def as_population(clients) -> ClientPopulation:
+    """Normalize a ``ClientPopulation | list`` clients argument — the
+    single conversion point run_federated/run_program share."""
+    if isinstance(clients, ClientPopulation):
+        return clients
+    return ClientPopulation.from_clients_data(clients)

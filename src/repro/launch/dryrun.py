@@ -45,14 +45,38 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             client_ranks=None, aggregation: str = "sync",
             dp_clip: float = 0.0, dp_noise_multiplier: float = 0.0,
             secure_agg: bool = False, backend: str = "spmd",
-            shard_clients: bool = False, n_clients: int = None) -> dict:
+            shard_clients: bool = False, n_clients: int = None,
+            population: str = None, cohort_size: int = None) -> dict:
     from repro.configs.base import PrivacyConfig
 
-    if step == "fed_round" and backend != "spmd":
+    if step == "fed_round" and backend not in ("spmd", "cohort"):
         raise ValueError(
             "--step fed_round lowers the SPMD round program (the "
             "sequential backend is a python loop with no single-program "
-            "artifact); use --backend spmd")
+            "artifact); use --backend spmd or cohort")
+    # --population dirichlet:<alpha>:<n_virtual>: the cohort-streaming
+    # scenario.  The compiled artifact is the per-cohort chunk program
+    # (the host driver re-invokes it over the stream), so the stacked
+    # client axis is clamped to one cohort — the virtual population
+    # size only shows up in the cohort count.
+    n_virtual = None
+    pop_alpha = None
+    if population:
+        try:
+            kind, alpha_s, nv = population.split(":")
+            if kind != "dirichlet":
+                raise ValueError(kind)
+            pop_alpha, n_virtual = float(alpha_s), int(nv)
+        except ValueError:
+            raise ValueError(
+                f"bad --population {population!r} (expected "
+                "dirichlet:<alpha>:<n_virtual>, e.g. dirichlet:0.5:100000)")
+        if not cohort_size:
+            raise ValueError("--population requires --cohort-size (the "
+                             "virtual fleet streams cohort by cohort)")
+    if cohort_size:
+        n_clients = cohort_size if n_clients is None \
+            else min(n_clients, cohort_size)
     cfg = get_config(arch)
     if kernel_policy:
         # thread ModelConfig.kernel_policy through the lowering path —
@@ -69,6 +93,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     if step == "fed_round":
         rec["fed_framework"] = fed_framework
         rec["backend"] = backend
+        if population:
+            rec["population"] = population
+            rec["dirichlet_alpha"] = pop_alpha
+            rec["n_virtual_clients"] = n_virtual
+        if cohort_size:
+            rec["cohort_size"] = cohort_size
+            rec["cohort_count"] = -(-(n_virtual or n_clients
+                                      or 2) // cohort_size)
         # async reuses the same per-bucket local-update programs — the
         # arrival schedule is host-side — so the compile artifact is the
         # sync one; the record keeps the axis visible in sweeps.
@@ -133,6 +165,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                                   shard_clients=shard_clients)
                     if n_clients is not None:
                         fed_kw["n_clients"] = n_clients
+                    if cohort_size:
+                        fed_kw["cohort_size"] = cohort_size
+                    if backend == "cohort" and fed_framework == "fedllm":
+                        # hierarchical a4 reduce: one edge per pod
+                        from repro.launch.mesh import n_edges as mesh_edges
+                        ne = mesh_edges(mesh)
+                        if ne > 1:
+                            fed_kw["n_edges"] = ne
+                            rec["n_edges"] = ne
                     fed_kw.update(build_kw)
                     fn, args, shardings = steps_mod.build_fed_round_step(
                         cfg, shape, mesh, remat=remat, **fed_kw)
@@ -236,6 +277,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         if errs:                                       # pragma: no cover
             rec["collective_error"] = "; ".join(errs)
         rec["bucket_programs"] = programs
+    if cohort_size and step == "fed_round":
+        # the per-cohort peak: one chunk program's whole footprint —
+        # under cohort streaming this bounds the round regardless of
+        # the virtual population size
+        rec["cohort_peak_gib_per_dev"] = round(
+            rec.get("arg_gib_per_dev", 0.0)
+            + rec.get("temp_gib_per_dev", 0.0)
+            + rec.get("out_gib_per_dev", 0.0), 3)
     if verbose:
         print(f"[{rec['status']}] {arch} x {shape_name} ({rec['mesh']}, "
               f"{rec['step']}): compile={rec.get('compile_s', '-')}s "
@@ -243,6 +292,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
               f"temp={rec.get('temp_gib_per_dev', '-')}GiB "
               f"coll={rec.get('collective_total', 0)/1e9:.2f}GB"
               + (f" buckets={len(programs)}" if len(programs) > 1 else ""))
+        if cohort_size and step == "fed_round":
+            print(f"    cohorts: {rec.get('cohort_count')} x "
+                  f"{cohort_size} clients"
+                  + (f" of {n_virtual} virtual" if n_virtual else "")
+                  + f", per-cohort peak "
+                  f"{rec['cohort_peak_gib_per_dev']}GiB/dev")
     return rec
 
 
@@ -261,10 +316,11 @@ def main():
                     choices=["fedllm", "kd", "split"],
                     help="which paper framework --step fed_round compiles")
     ap.add_argument("--backend", default="spmd",
-                    choices=["sequential", "spmd"],
+                    choices=["sequential", "spmd", "cohort"],
                     help="round-engine execution backend for --step "
-                         "fed_round; only spmd has a single-program "
-                         "compile artifact")
+                         "fed_round; spmd compiles the whole stacked "
+                         "round, cohort compiles the per-cohort chunk "
+                         "program the streaming driver re-invokes")
     ap.add_argument("--shard-clients", action="store_true",
                     help="shard the stacked client axis of --step "
                          "fed_round over the mesh's client axes "
@@ -274,7 +330,20 @@ def main():
     ap.add_argument("--n-clients", type=int, default=None,
                     help="client count for --step fed_round (default 2, "
                          "or the client-axis extent with "
-                         "--shard-clients)")
+                         "--shard-clients); with --cohort-size this is "
+                         "an alias clamped to one cohort")
+    ap.add_argument("--population", default=None,
+                    help="virtual client population for --step fed_round "
+                         "as dirichlet:<alpha>:<n_virtual>, e.g. "
+                         "dirichlet:0.5:100000 — the cohort-streaming "
+                         "scenario (requires --cohort-size; the record "
+                         "gets cohort_count and the per-cohort peak "
+                         "memory)")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="clients per streamed cohort for --step "
+                         "fed_round: the compiled chunk program stacks "
+                         "exactly one cohort, whatever the population "
+                         "size")
     ap.add_argument("--kernel-policy", default=None,
                     choices=["xla", "pallas", "auto"],
                     help="override ModelConfig.kernel_policy for the "
@@ -333,7 +402,9 @@ def main():
                                    secure_agg=args.secure_agg,
                                    backend=args.backend,
                                    shard_clients=args.shard_clients,
-                                   n_clients=args.n_clients))
+                                   n_clients=args.n_clients,
+                                   population=args.population,
+                                   cohort_size=args.cohort_size))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

@@ -73,3 +73,14 @@ def client_axis_size(mesh) -> int:
 
 def model_axis_size(mesh) -> int:
     return mesh.shape["model"]
+
+
+def n_edges(mesh) -> int:
+    """Edge-aggregator count of the two-hop client -> edge -> server
+    hierarchy: one edge per pod on a multi-pod mesh, else a single
+    (degenerate, flat) edge.  The cohort-streaming driver derives its
+    hierarchical ledger accounting — and the compiled round its
+    hierarchical client-axis reduce — from this."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("pod", 1))

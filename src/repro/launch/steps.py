@@ -135,7 +135,8 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                          remat: str = "full", lora_rank: int = LORA_RANK,
                          framework: str = "fedllm",
                          privacy: PrivacyConfig = None,
-                         shard_clients: bool = False):
+                         shard_clients: bool = False,
+                         cohort_size: int = 0, n_edges: int = 1):
     """Multi-pod federated round for any of the three frameworks, built
     from the SAME stage-specs the runtime pipeline runs
     (core/round_program.FrameworkProgram.spmd_round): clients on the
@@ -156,7 +157,17 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
     DP-SGD clipping inside the local update (the fused clip kernel is in
     the traced program under ``kernel_policy="pallas"`` — dryrun verifies
     this), DP payload/activation noise from extra noise-key inputs, and
-    the b3/c2 mechanisms of the KD/Split rounds."""
+    the b3/c2 mechanisms of the KD/Split rounds.
+
+    ``cohort_size`` > 0 clamps the stacked client axis to one cohort:
+    the compiled artifact under cohort streaming is the per-chunk
+    program, re-invoked over the cohort stream by the host driver, so
+    its memory footprint IS the round's peak regardless of the virtual
+    population size.  ``n_edges`` > 1 lowers the FedLLM a4 reduce as
+    the hierarchical per-edge partial sum + cross-edge tree reduce
+    (core/fed_spmd.hierarchical_client_mean)."""
+    if cohort_size and cohort_size > 0:
+        n_clients = min(n_clients, cohort_size)
     model = build_model(cfg)
     policy = ShardingPolicy(mesh, cfg)
     params_shape = model.init_abstract(dtype=jnp.bfloat16)
@@ -234,7 +245,7 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
         fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA,
                         privacy=privacy)
         round_step = round_program.FedLLMProgram.spmd_round(
-            model, fed, task="generative")
+            model, fed, task="generative", n_edges=n_edges)
         batch_shape = _stacked_batch(False)
         args = (params_shape, slt_shape, sopt_shape, batch_shape,
                 keys_shape, valid_shape, weights_shape)

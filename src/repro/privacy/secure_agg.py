@@ -76,15 +76,25 @@ class SecureAggSession:
 
     # -- cohort setup ------------------------------------------------------ #
     def begin_cohort(self, ledger: M.CommLedger, rnd: int,
-                     cohort: Iterable[int]):
+                     cohort: Iterable[int], cohort_id: int = None):
         """Key/share exchange for the clients starting a job this round
-        (sync: everyone, every round).  Records the exchange bytes."""
+        (sync: everyone, every round).  Records the exchange bytes.
+
+        ``cohort_id`` keys the masking cohort when it differs from the
+        ledger round: the cohort-streaming executor masks each start
+        *chunk* against itself (one cohort per chunk, several per
+        round) so a chunk's masked sum cancels — and its payloads are
+        freed — as soon as the whole chunk delivers, instead of only
+        after the full fleet does.  ``collect`` / ``deliver`` /
+        ``discard`` key by the same id (their ``start_rnd`` argument);
+        the flat engines pass nothing and keep the one-cohort-per-round
+        behavior bit-for-bit."""
         if not self.enabled:
             return
         cis = list(cohort)
         if not cis:
             return
-        self._cohorts[rnd] = cis
+        self._cohorts[rnd if cohort_id is None else cohort_id] = cis
         n = len(cis)
         if n < 2:
             return                         # nothing to mask against

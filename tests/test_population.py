@@ -1,0 +1,275 @@
+"""Million-client rounds: ClientPopulation laziness, the cohort-
+streaming executor's golden parity against the flat engines, and the
+hierarchical (client->edge->server) ledger accounting.
+
+Parity is the acceptance bar: ``backend="cohort"`` must report the
+exact same CommLedger bytes as sequential/SPMD for every framework,
+with metrics within fp32 tolerance — whether the cohort covers the
+fleet (cohort_size >= n_clients) or streams it in chunks."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, ModelConfig, PrivacyConfig
+from repro.core import metrics as M
+from repro.core.rounds import run_federated
+from repro.data import banking77, partition
+from repro.data.population import (ClientPopulation, DirichletPopulation,
+                                   EagerPopulation)
+
+CFG = ModelConfig(name="pop-t", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=192,
+                  qkv_bias=True, activation="gelu", norm="layernorm",
+                  use_rope=False, max_position_embeddings=64)
+
+FRAMEWORKS = ("fedllm", "kd", "split")
+
+
+@pytest.fixture(scope="module")
+def case():
+    pub = banking77.generate(24, CFG.vocab_size, 12, seed=0)
+    tr = banking77.generate(96, CFG.vocab_size, 12, seed=1)
+    te = banking77.generate(16, CFG.vocab_size, 12, seed=2)
+    return pub, partition.iid_partition(tr, 4, seed=0), te
+
+
+def _fed(**kw):
+    base = dict(framework="fedllm", n_clients=4, rounds=2, lora_rank=4,
+                lora_dropout=0.0, split_layer=1, kd_epochs=1, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(case, fed):
+    pub, clients, te = case
+    return run_federated(CFG, fed, pub,
+                         ClientPopulation.from_clients_data(clients), te,
+                         batch_size=8, eval_batch=16)
+
+
+# --------------------------------------------------------------------------- #
+# Golden parity: cohort executor vs the sequential reference, all
+# frameworks x (cohort covers fleet, cohort streams fleet)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module", params=FRAMEWORKS)
+def cohort_matrix(request, case):
+    fw = request.param
+    seq = _run(case, _fed(framework=fw))
+    whole = _run(case, _fed(framework=fw, backend="cohort", cohort_size=8))
+    chunked = _run(case, _fed(framework=fw, backend="cohort",
+                              cohort_size=2))
+    return fw, seq, {"cohort>=n": whole, "cohort<n": chunked}
+
+
+def test_cohort_ledger_parity_exact(cohort_matrix):
+    fw, seq, runs = cohort_matrix
+    for tag, coh in runs.items():
+        assert seq.ledger.per_round() == coh.ledger.per_round(), (fw, tag)
+        assert seq.ledger.by_name() == coh.ledger.by_name(), (fw, tag)
+        assert seq.ledger.per_client_round() == \
+            coh.ledger.per_client_round(), (fw, tag)
+        assert seq.ledger.total() == coh.ledger.total(), (fw, tag)
+
+
+def test_cohort_metrics_parity(cohort_matrix):
+    fw, seq, runs = cohort_matrix
+    for tag, coh in runs.items():
+        assert abs(seq.final_accuracy - coh.final_accuracy) <= 1e-3, \
+            (fw, tag)
+        for hs, hc in zip(seq.history, coh.history):
+            assert abs(hs.loss - hc.loss) <= 1e-3, (fw, tag)
+            assert abs(hs.accuracy - hc.accuracy) <= 1e-3, (fw, tag)
+
+
+def test_cohort_flops_parity_exact(cohort_matrix):
+    fw, seq, runs = cohort_matrix
+    for tag, coh in runs.items():
+        np.testing.assert_array_equal(np.asarray(seq.client_flops),
+                                      np.asarray(coh.client_flops),
+                                      err_msg=f"{fw}/{tag}")
+
+
+def test_cohort_final_tree_close(cohort_matrix):
+    fw, seq, runs = cohort_matrix
+    for tag, coh in runs.items():
+        for a, b in zip(jax.tree.leaves(seq.final_lora),
+                        jax.tree.leaves(coh.final_lora)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=5e-4,
+                                       err_msg=f"{fw}/{tag}")
+
+
+# --------------------------------------------------------------------------- #
+# Async + secure-agg + hetero compose with cohort streaming
+# --------------------------------------------------------------------------- #
+def test_cohort_async_parity(case):
+    fed = _fed(aggregation="async", max_staleness=2, rounds=4)
+    seq = _run(case, fed)
+    coh = _run(case, dataclasses.replace(fed, backend="cohort",
+                                         cohort_size=2))
+    assert seq.ledger.per_client_round() == coh.ledger.per_client_round()
+    assert abs(seq.final_accuracy - coh.final_accuracy) <= 1e-3
+
+
+def test_cohort_secagg_payload_parity(case):
+    """Per-chunk masking cohorts change the secagg key-exchange bytes
+    (smaller cohorts, fewer pairs) but must leave every model-payload
+    byte — and the mask-cancellation invariant — intact."""
+    fed = _fed(privacy=PrivacyConfig(secure_agg=True))
+    seq = _run(case, fed)
+    coh = _run(case, dataclasses.replace(fed, backend="cohort",
+                                         cohort_size=2))
+    assert "secagg_keys" in coh.ledger.by_name()
+    assert seq.ledger.payload_view().per_client_round() == \
+        coh.ledger.payload_view().per_client_round()
+    assert abs(seq.final_accuracy - coh.final_accuracy) <= 1e-3
+
+
+def test_cohort_hetero_parity(case):
+    fed = _fed(client_ranks=[4, 2, 4, 2])
+    seq = _run(case, fed)
+    coh = _run(case, dataclasses.replace(fed, backend="cohort",
+                                         cohort_size=2))
+    assert seq.ledger.per_client_round() == coh.ledger.per_client_round()
+    for a, b in zip(jax.tree.leaves(seq.final_lora),
+                    jax.tree.leaves(coh.final_lora)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+# --------------------------------------------------------------------------- #
+# Hierarchical aggregation: client->edge / edge->server accounting
+# --------------------------------------------------------------------------- #
+def test_hierarchical_hop_accounting(case):
+    fed = _fed(backend="cohort", cohort_size=2)
+    flat = _run(case, fed)
+    hier = _run(case, dataclasses.replace(fed, n_edges=2))
+    # every per-client byte of the flat topology is the first hop of
+    # the two-hop one — the hierarchical reduce's client-side total
+    # matches the flat aggregation's bytes exactly
+    assert hier.ledger.hop_total(M.CLIENT_EDGE) == flat.ledger.total()
+    assert set(hier.ledger.by_hop()) == {M.CLIENT_EDGE, M.EDGE_SERVER}
+    assert hier.ledger.hop_total(M.EDGE_SERVER) > 0
+    # the edge->server hop is infrastructure: payload accounting and
+    # the per-client mean are unchanged
+    assert hier.ledger.payload_view().per_client_round() == \
+        flat.ledger.payload_view().per_client_round()
+    assert hier.history[-1].comm_bytes_per_client == \
+        flat.history[-1].comm_bytes_per_client
+    # and the model is the same convex combination
+    for a, b in zip(jax.tree.leaves(flat.final_lora),
+                    jax.tree.leaves(hier.final_lora)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_hierarchical_client_mean_matches_flat():
+    from repro.core import fed_spmd
+    k = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(k, (8, 3, 5)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (8, 7))}
+    w = jax.numpy.asarray([1., 2., 3., 4., 5., 6., 7., 8.])
+    flat = fed_spmd.weighted_client_mean(tree, w)
+    for ne in (2, 4):
+        hier = fed_spmd.hierarchical_client_mean(tree, w, ne)
+        for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, rtol=1e-6)
+    # non-divisible edge counts fall back to the flat reduce
+    fb = fed_spmd.hierarchical_client_mean(tree, w, 3)
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(fb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# ClientPopulation: laziness, determinism, cohort API
+# --------------------------------------------------------------------------- #
+def _base_data(n=120):
+    d = banking77.generate(n, CFG.vocab_size, 12, seed=3)
+    return d
+
+
+def test_dirichlet_population_100k_is_lazy():
+    """A 100k-virtual-client fleet must cost O(base data): no array
+    anywhere in the population with a leading dim near the fleet size,
+    and cohort materialization touches only the cohort."""
+    base = _base_data()
+    pop = DirichletPopulation(base, 100_000, alpha=0.5, seed=7,
+                              shard_size=8)
+    assert len(pop) == 100_000
+    assert pop.n_cohorts(64) == 1563
+    for arr in jax.tree.leaves(pop.__dict__):
+        if isinstance(arr, np.ndarray):
+            assert arr.shape[0] < 100_000
+    c = pop.cohort(0, 1562, 64)            # the ragged last cohort
+    assert c.clients[0] == 1562 * 64 and len(c) == 100_000 - 1562 * 64
+    c0 = pop.cohort(0, 0, 64)
+    assert len(c0) == 64
+    # bitwise-deterministic regardless of materialization order
+    again = pop.client(c0.clients[5])
+    np.testing.assert_array_equal(c0.data[5]["tokens"], again["tokens"])
+    with pytest.raises(IndexError):
+        pop.cohort(0, 1563, 64)
+    with pytest.raises(IndexError):
+        pop[100_000]
+
+
+def test_dirichlet_population_order_independent():
+    base = _base_data()
+    a = DirichletPopulation(base, 50, alpha=0.3, seed=11)
+    b = DirichletPopulation(base, 50, alpha=0.3, seed=11)
+    # touch b's clients in reverse order — shards must not move
+    rev = {ci: b.client(ci) for ci in reversed(range(50))}
+    for ci in range(0, 50, 7):
+        fwd = a.client(ci)
+        for k in fwd:
+            np.testing.assert_array_equal(fwd[k], rev[ci][k])
+
+
+def test_dirichlet_partition_delegates_to_population():
+    """data/partition.dirichlet_partition is now the eager view of the
+    same seeded fold-in derivation — bit-stable per client."""
+    base = _base_data()
+    parts = partition.dirichlet_partition(base, 6, alpha=0.5, seed=5)
+    pop = DirichletPopulation(base, 6, alpha=0.5, seed=5)
+    assert len(parts) == 6
+    for ci in range(6):
+        np.testing.assert_array_equal(parts[ci]["tokens"],
+                                      pop.client(ci)["tokens"])
+
+
+def test_eager_population_wraps_by_reference(case):
+    _, clients, _ = case
+    pop = ClientPopulation.from_clients_data(clients)
+    assert isinstance(pop, EagerPopulation)
+    assert len(pop) == len(clients)
+    assert pop[2] is clients[2]
+    assert pop.data_weights() == [len(d["tokens"]) for d in clients]
+
+
+# --------------------------------------------------------------------------- #
+# API shim: eager lists deprecate, populations are the way in
+# --------------------------------------------------------------------------- #
+def test_eager_list_shim_warns_population_does_not(case):
+    pub, clients, te = case
+    fed = _fed(rounds=1)
+    with pytest.warns(DeprecationWarning):
+        run_federated(CFG, fed, pub, clients, te, batch_size=8,
+                      eval_batch=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run_federated(CFG, fed, pub,
+                      ClientPopulation.from_clients_data(clients), te,
+                      batch_size=8, eval_batch=16)
+
+
+def test_n_virtual_clients_mismatch_raises(case):
+    pub, clients, te = case
+    fed = _fed(n_virtual_clients=9)
+    with pytest.raises(ValueError, match="n_virtual_clients"):
+        run_federated(CFG, fed, pub,
+                      ClientPopulation.from_clients_data(clients), te,
+                      batch_size=8, eval_batch=16)
