@@ -27,6 +27,43 @@ class CheckpointManager:
         self._gc()
         return path
 
+    def save_state(self, step: int, state,
+                   metadata: Optional[dict] = None) -> str:
+        """Dtype-exact, template-free snapshot (bit-exact crash
+        recovery): arrays land in the npz, the structure manifest and
+        any python-scalar state land in the json sidecar.  Shares the
+        step naming and retention policy with ``save``."""
+        import io
+
+        import numpy as np
+
+        path = os.path.join(self.dir, _FMT.format(step=step))
+        manifest, arrays = serialization.state_flatten(state)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        with open(path, "wb") as f:
+            f.write(buf.getvalue())
+        with open(path + ".json", "w") as f:
+            json.dump({"manifest": manifest, "meta": metadata}, f)
+        self._gc()
+        return path
+
+    def restore_state(self, step: Optional[int] = None):
+        """-> (state, metadata) saved by ``save_state`` (latest step by
+        default)."""
+        import numpy as np
+
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, _FMT.format(step=step))
+        with open(path + ".json") as f:
+            doc = json.load(f)
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+        return serialization.state_unflatten(doc["manifest"], arrays), \
+            doc.get("meta")
+
     def steps(self):
         out = []
         for fn in os.listdir(self.dir):

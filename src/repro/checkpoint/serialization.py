@@ -52,6 +52,75 @@ def unflatten_into(template, flat: Dict[str, np.ndarray], prefix: str = ""):
     return rec(template, prefix)
 
 
+# --------------------------------------------------------------------------- #
+# Template-free, dtype-exact state serialization (checkpoint/federated.py)
+# --------------------------------------------------------------------------- #
+# ``flatten_tree`` needs a template to restore into and downcasts
+# ml_dtypes leaves to fp32 — fine for model snapshots, fatal for
+# bit-exact crash recovery.  ``state_flatten``/``state_unflatten``
+# instead carry a JSON *manifest* of the tree structure alongside the
+# arrays: dict/tuple/list/None nodes and python scalars live in the
+# manifest, array leaves keep their exact dtype (non-numpy dtypes such
+# as bfloat16 are stored as raw-bit unsigned views and re-viewed on
+# load), and each leaf records whether it was a jax or numpy array so
+# restore hands back the same kind.
+def state_flatten(state):
+    """-> (manifest, {name: np.ndarray}) for ``np.savez`` + json."""
+    arrays: Dict[str, np.ndarray] = {}
+    counter = iter(range(1 << 30))
+
+    def rec(t):
+        if t is None:
+            return {"t": "none"}
+        if isinstance(t, dict):
+            items = list(t.items())
+            return {"t": "dict", "k": [k for k, _ in items],
+                    "v": [rec(v) for _, v in items]}
+        if isinstance(t, tuple):
+            return {"t": "tuple", "v": [rec(x) for x in t]}
+        if isinstance(t, list):
+            return {"t": "list", "v": [rec(x) for x in t]}
+        if isinstance(t, (bool, int, float, str)):
+            return {"t": "py", "v": t}
+        is_jax = isinstance(t, jax.Array)
+        arr = np.asarray(t)
+        node: Dict[str, Any] = {"t": "arr", "id": f"a{next(counter)}",
+                                "jax": is_jax}
+        if arr.dtype.kind not in "biufc":
+            node["dtype"] = arr.dtype.name        # e.g. "bfloat16"
+            view = np.dtype(f"u{arr.dtype.itemsize}") \
+                if arr.dtype.itemsize in (1, 2, 4, 8) else np.uint8
+            arr = arr.view(view)
+        arrays[node["id"]] = arr
+        return node
+
+    return rec(state), arrays
+
+
+def state_unflatten(manifest, arrays: Dict[str, np.ndarray]):
+    """Inverse of ``state_flatten`` (manifest may have round-tripped
+    through JSON)."""
+
+    def rec(n):
+        t = n["t"]
+        if t == "none":
+            return None
+        if t == "dict":
+            return {k: rec(v) for k, v in zip(n["k"], n["v"])}
+        if t == "tuple":
+            return tuple(rec(x) for x in n["v"])
+        if t == "list":
+            return [rec(x) for x in n["v"]]
+        if t == "py":
+            return n["v"]
+        arr = arrays[n["id"]]
+        if "dtype" in n:
+            arr = arr.view(np.dtype(n["dtype"]))
+        return jax.numpy.asarray(arr) if n["jax"] else arr
+
+    return rec(manifest)
+
+
 def save_npz(path: str, tree) -> int:
     flat = flatten_tree(tree)
     buf = io.BytesIO()

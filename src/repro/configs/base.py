@@ -258,6 +258,46 @@ class PrivacyConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault injection for the round engine (src/repro/faults/).
+
+    A ``FaultPlan`` derives every fault decision from
+    ``(FedConfig.seed, FaultConfig.seed, round, client)`` fold-in
+    streams (core/rng.host_fold_rng), so a faulted run is exactly
+    reproducible on any framework x backend x schedule combo and is
+    independent of the batching / dropout / privacy RNG streams.
+
+    Fault taxonomy:
+      * dropout   — the client trains but its upload is lost in transit
+                    (charged as ``retransmit`` bytes in the CommLedger;
+                    under secure aggregation the cohort's survivors pay
+                    the usual mask-recovery traffic)
+      * straggler — the upload arrives ``straggler_delay`` rounds late,
+                    flowing through the staleness-weighted async path
+      * byzantine — ``byzantine`` clients (a seeded fixed subset of the
+                    population) corrupt every payload they upload:
+                    ``nan`` / ``inf`` (caught by the finite-check
+                    validator and quarantined), ``sign_flip`` (negated
+                    update), or ``norm_inflation`` (scaled by
+                    ``byzantine_scale``; caught by the norm screen or
+                    absorbed by a robust aggregator)
+    """
+
+    dropout_rate: float = 0.0        # P(upload lost) per started job
+    straggler_rate: float = 0.0      # P(upload delayed) per started job
+    straggler_delay: int = 2         # extra rounds a straggling upload takes
+    byzantine: int = 0               # number of permanently corrupt clients
+    byzantine_mode: str = "sign_flip"  # nan | inf | sign_flip | norm_inflation
+    byzantine_scale: float = 100.0   # multiplier for norm_inflation
+    seed: int = 0                    # fault stream (folded with FedConfig.seed)
+
+    @property
+    def enabled(self) -> bool:
+        return (self.dropout_rate > 0.0 or self.straggler_rate > 0.0
+                or self.byzantine > 0)
+
+
+@dataclasses.dataclass(frozen=True)
 class FedConfig:
     """Federated fine-tuning round configuration (paper SS II/V)."""
     framework: str = "fedllm"        # fedllm | kd | split
@@ -320,6 +360,29 @@ class FedConfig:
     # privacy subsystem (src/repro/privacy/): client-side DP-SGD and
     # simulated secure aggregation, uniform over frameworks/backends
     privacy: PrivacyConfig = dataclasses.field(default_factory=PrivacyConfig)
+    # fault tolerance (src/repro/faults/ + core/round_program.py):
+    #   faults        — seeded dropout/straggler/byzantine injection plan
+    #   robust_agg    — server-side combine over the stacked client axis:
+    #                   mean (paper-literal weighted mean) | median
+    #                   (coordinate-wise) | trimmed_mean (drop the
+    #                   ``trim_frac`` extremes per coordinate) |
+    #                   norm_clip (clip each update's L2 norm to
+    #                   ``clip_norm`` — 0 = the cohort's median norm —
+    #                   before the weighted mean)
+    #   quorum        — min fraction of the round's started clients that
+    #                   must survive validation/staleness for the round
+    #                   to aggregate; below it the round rolls over
+    #                   deterministically (global state unchanged)
+    #   screen_factor — quarantine arrivals whose payload L2 norm
+    #                   exceeds ``screen_factor`` x the round's median
+    #                   arrival norm (0 = norm screen off; non-finite
+    #                   payloads are always quarantined)
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    robust_agg: str = "mean"         # mean | median | trimmed_mean | norm_clip
+    trim_frac: float = 0.2           # per-side trim fraction (trimmed_mean)
+    clip_norm: float = 0.0           # norm_clip threshold (0 = median norm)
+    quorum: float = 0.0              # 0 = no quorum gate
+    screen_factor: float = 0.0       # 0 = norm screen off
     # optimization
     lr: float = 1e-3
     optimizer: str = "adam"

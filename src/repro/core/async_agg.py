@@ -80,6 +80,16 @@ class ParticipationSchedule:
         return int(self._rngs[ci].binomial(self.max_staleness + 1,
                                            self.slowness[ci]))
 
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def state(self) -> List[dict]:
+        """Per-client generator states — the only mutable part (the
+        slowness traits re-derive from the seed)."""
+        return [g.bit_generator.state for g in self._rngs]
+
+    def load_state(self, states: List[dict]):
+        for g, st in zip(self._rngs, states):
+            g.bit_generator.state = st
+
 
 def staleness_weight(staleness: int, decay: float) -> float:
     """Polynomial staleness decay (FedAsync): ``(1 + s)^-decay``."""
@@ -127,6 +137,57 @@ def stale_weighted_avg(global_tree, arrivals, total_weight: float, fed,
         return aggregate_hetero(trees, rks, fed.lora_alpha, fed.lora_rank,
                                 ws, fed.hetero_agg)
     return fedavg(trees, ws)
+
+
+def robust_stale_combine(global_tree, arrivals, total_weight: float, fed,
+                         ranks: List[int]):
+    """Byzantine-robust counterpart of ``stale_weighted_avg``.
+
+    The robust statistic (``fed_spmd.robust_client_combine``) runs over
+    the *arrived* updates only — anchoring absent mass on the current
+    global inside a median/trim would let the anchor masquerade as a
+    client — and the result is then blended with the current global by
+    the staleness-weighted arrived mass ``rho``, preserving the async
+    semantics that a thin round moves the model only a little.  When
+    everyone arrives fresh (``rho == 1``) the result is exactly the
+    robust combine of the cohort.  Heterogeneous ranks are zero-padded
+    to the global rank first (order statistics need one client axis)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import fed_spmd
+    from repro.peft import lora as lora_lib
+
+    trees = []
+    for ci, t, _, _ in arrivals:
+        if ranks[ci] != fed.lora_rank:
+            t = lora_lib.pad_rank(t, fed.lora_rank)
+        trees.append(t)
+    ws = [w * staleness_weight(s, fed.staleness_decay)
+          for _, _, s, w in arrivals]
+    agg = fed_spmd.robust_client_combine(
+        fed_spmd.stack_trees(trees), jnp.asarray(ws, jnp.float32),
+        fed.robust_agg, fed.trim_frac, fed.clip_norm)
+    absent = total_weight - sum(w for _, _, _, w in arrivals)
+    if absent <= 0:
+        return agg
+    rho = sum(ws) / (absent + sum(ws))
+    return jax.tree.map(
+        lambda g, a: ((1.0 - rho) * g.astype(jnp.float32)
+                      + rho * a.astype(jnp.float32)).astype(g.dtype),
+        global_tree, agg)
+
+
+def combine_arrivals(global_tree, arrivals, total_weight: float, fed,
+                     ranks: List[int]):
+    """The round's configured host-side combine: plain staleness-weighted
+    (hetero-aware) FedAvg, or the robust path when ``fed.robust_agg``
+    asks for one."""
+    if getattr(fed, "robust_agg", "mean") != "mean" and arrivals:
+        return robust_stale_combine(global_tree, arrivals, total_weight,
+                                    fed, ranks)
+    return stale_weighted_avg(global_tree, arrivals, total_weight, fed,
+                              ranks)
 
 
 def _local_rng(fed, rnd: int, ci: int):

@@ -154,11 +154,21 @@ def _select(ok, new, old):
     return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
 
 
+def _normalized(weights):
+    """Weights normalized to sum 1, degrading to uniform when the total
+    is zero (a fully-dropped cohort must not turn the aggregate into
+    NaN).  Bit-transparent for any positive total: the guarded divisor
+    equals the plain sum, so existing parity pins are unaffected."""
+    w = weights.astype(jnp.float32)
+    s = w.sum()
+    return jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0),
+                     1.0 / w.shape[0])
+
+
 def weighted_client_mean(stacked_tree, weights):
     """FedAvg as a reduction over the leading client axis (fp32 accum,
     like core/fedavg.fedavg) — one all-reduce when that axis is sharded."""
-    w = weights.astype(jnp.float32)
-    w = w / w.sum()
+    w = _normalized(weights)
 
     def mean(x):
         wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
@@ -185,9 +195,7 @@ def hierarchical_client_mean(stacked_tree, weights, n_edges: int):
     C = weights.shape[0]
     if n_edges <= 1 or C % n_edges:
         return weighted_client_mean(stacked_tree, weights)
-    w = weights.astype(jnp.float32)
-    w = w / w.sum()
-    we = w.reshape(n_edges, C // n_edges)
+    we = _normalized(weights).reshape(n_edges, C // n_edges)
 
     def mean(x):
         xe = x.reshape((n_edges, C // n_edges) + x.shape[1:])
@@ -200,6 +208,74 @@ def hierarchical_client_mean(stacked_tree, weights, n_edges: int):
         return part[0].astype(x.dtype)
 
     return jax.tree.map(mean, stacked_tree)
+
+
+# --------------------------------------------------------------------------- #
+# Byzantine-robust client-axis reductions (src/repro/faults/)
+# --------------------------------------------------------------------------- #
+def robust_client_combine(stacked_tree, weights, method: str,
+                          trim_frac: float = 0.2, clip_norm: float = 0.0):
+    """Byzantine-robust drop-in for ``weighted_client_mean`` over the
+    stacked client axis (``FedConfig.robust_agg``):
+
+    - ``median``: coordinate-wise median.  Unweighted — order statistics
+      ignore data weights; tolerates < C/2 corrupt clients per
+      coordinate.
+    - ``trimmed_mean``: per coordinate, sort the client axis and drop
+      ``floor(trim_frac * C)`` values from each end before the
+      (unweighted) mean; tolerates up to the trimmed count corrupt.
+    - ``norm_clip``: clip each client update's global L2 norm to
+      ``clip_norm`` (0 = the cohort's median norm), then take the
+      usual weighted mean — bounds any single client's pull without
+      discarding honest heavy updates.
+
+    All methods accumulate in fp32 and cast back to the leaf dtype,
+    like the plain mean.  They never change payload shapes, so ledger
+    bytes under a robust aggregate match the plain engines exactly.
+    """
+    if method in ("mean", None, ""):
+        return weighted_client_mean(stacked_tree, weights)
+    C = jax.tree.leaves(stacked_tree)[0].shape[0]
+    if method == "median":
+        return jax.tree.map(
+            lambda x: jnp.median(x.astype(jnp.float32), axis=0)
+            .astype(x.dtype), stacked_tree)
+    if method == "trimmed_mean":
+        k = int(trim_frac * C)
+        if 2 * k >= C:
+            k = (C - 1) // 2
+
+        def tmean(x):
+            s = jnp.sort(x.astype(jnp.float32), axis=0)
+            return s[k:C - k].mean(axis=0).astype(x.dtype)
+
+        return jax.tree.map(tmean, stacked_tree)
+    if method == "norm_clip":
+        sq = sum(jnp.square(x.astype(jnp.float32))
+                 .reshape(C, -1).sum(axis=1)
+                 for x in jax.tree.leaves(stacked_tree))
+        norms = jnp.sqrt(sq)                                   # (C,)
+        tau = jnp.asarray(clip_norm, jnp.float32) if clip_norm > 0 \
+            else jnp.median(norms)
+        scale = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-12))
+        clipped = jax.tree.map(
+            lambda x: (scale.reshape((-1,) + (1,) * (x.ndim - 1))
+                       * x.astype(jnp.float32)).astype(x.dtype),
+            stacked_tree)
+        return weighted_client_mean(clipped, weights)
+    raise ValueError(f"unknown robust_agg {method!r}")
+
+
+def client_combine(stacked_tree, weights, fed: FedConfig):
+    """The round's configured client-axis reduction: the plain weighted
+    mean, or the Byzantine-robust combine when ``fed.robust_agg`` says
+    so.  Robust statistics do not decompose over edges, so a robust
+    combine is always the flat (single-hop) reduction — hierarchical
+    runs fall back to it whole-cohort."""
+    if fed.robust_agg != "mean":
+        return robust_client_combine(stacked_tree, weights, fed.robust_agg,
+                                     fed.trim_frac, fed.clip_norm)
+    return weighted_client_mean(stacked_tree, weights)
 
 
 # --------------------------------------------------------------------------- #
@@ -281,9 +357,14 @@ def make_spmd_round(model: Model, fed: FedConfig,
                 lambda t, k: dp_mod.privatize_tree(t, k, noise_std))(
                     new_lt, noise_keys)
         # a4: weighted FedAvg == client-axis reduction -> all-reduce
-        # (or the per-pod psum + cross-pod tree when edges are in play)
-        avg = hierarchical_client_mean(new_lt, weights, n_edges) \
-            if n_edges > 1 else weighted_client_mean(new_lt, weights)
+        # (or the per-pod psum + cross-pod tree when edges are in play;
+        # a robust_agg overrides both — order statistics don't
+        # decompose over edges, so the robust combine is always flat)
+        if fed.robust_agg != "mean":
+            avg = client_combine(new_lt, weights, fed)
+        else:
+            avg = hierarchical_client_mean(new_lt, weights, n_edges) \
+                if n_edges > 1 else weighted_client_mean(new_lt, weights)
         # a1 of the next round: broadcast back to every client slot
         C = jax.tree.leaves(stacked_lt)[0].shape[0]
         redist = jax.tree.map(
@@ -392,7 +473,8 @@ def make_split_spmd_round(model: Model, fed: FedConfig,
                 stacked_c,
                 jax.tree.map(lambda x: client_sharding(x.ndim), stacked_c))
         # cc2: FedAvg of the client halves — client-axis reduction
-        new_c_global = weighted_client_mean(stacked_c, weights)
+        # (robust combine when configured)
+        new_c_global = client_combine(stacked_c, weights, fed)
         return new_c_global, s_lt, s_opt, losses, stacked_c
 
     return round_step

@@ -88,6 +88,10 @@ def make_fns(model: Model, fed: FedConfig, task: str = "classification"):
         else:
             loss, grads = jax.value_and_grad(loss_fn)(lt)
         new_lt, new_opt = opt_update(grads, opt_state, lt, fed.lr)
+        # metric-only guard: a corrupted/diverged batch must not poison
+        # the round's accumulated mean loss (the params still move and
+        # the upload-seam validation screens the payload itself)
+        loss = jnp.where(jnp.isfinite(loss), loss, 0.0)
         return new_lt, new_opt, loss
 
     train_step = jax.jit(train_step_impl)
@@ -148,7 +152,9 @@ def fedavg(trees: Sequence, weights: Optional[Sequence[float]] = None):
     if weights is None:
         weights = [1.0] * len(trees)
     total = float(sum(weights))
-    ws = [w / total for w in weights]
+    # fully-dropped cohort: fall back to a uniform mean rather than 0/0
+    ws = [w / total for w in weights] if total > 0 \
+        else [1.0 / len(trees)] * len(trees)
 
     def mean(*leaves):
         out = leaves[0].astype(jnp.float32) * ws[0]

@@ -85,7 +85,7 @@ def aggregate_knowledge(client_logits_list: List,
     if weights is None:
         weights = [1.0] * len(client_logits_list)
     w = jnp.asarray(weights, jnp.float32)
-    w = w / w.sum()
+    w = _normalized_w(w)
     stack = jnp.stack([jnp.asarray(x) for x in client_logits_list])
     agg = jnp.einsum("c,cnd->nd", w,
                      stack.astype(jnp.float32)).astype(jnp.float32)
@@ -105,8 +105,17 @@ def aggregate_knowledge_batched(stacked, weights) -> jax.Array:
     over axis 0 of a (C, N, D) logit stack in fp32 — lowers to one
     all-reduce when the client axis is sharded over pods."""
     w = jnp.asarray(weights, jnp.float32)
-    w = w / w.sum()
+    w = _normalized_w(w)
     return jnp.einsum("c,cnd->nd", w, jnp.asarray(stacked, jnp.float32))
+
+
+def _normalized_w(w: jax.Array) -> jax.Array:
+    """Normalize knowledge weights; a zero-mass cohort (every client
+    dropped/quarantined) degrades to a uniform mean instead of NaN.
+    Bit-transparent for positive totals."""
+    s = w.sum()
+    return jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0),
+                     1.0 / w.shape[0])
 
 
 def _entropy_jnp(logits) -> jax.Array:

@@ -39,6 +39,14 @@ PRIVACY_NAMES = ("secagg_keys", "secagg_recovery", "dp_meta")
 # like PRIVACY_NAMES these are topology overhead, not client payload,
 # and parity comparisons filter them via ``payload_view``.
 EDGE_NAMES = ("edge_agg",)
+# Fault-tolerance accounting (src/repro/faults/ + the round driver's
+# validation middleware): ``quarantine`` — an arrival the validator
+# rejected (non-finite or norm-screened payload; the bytes crossed the
+# wire but never reached the aggregate), ``retransmit`` — an upload a
+# FaultPlan dropout lost in transit (wasted upstream bytes the client
+# must re-send).  Like PRIVACY_NAMES/EDGE_NAMES these are overhead, not
+# model payload, and ``payload_view`` filters them.
+FAULT_NAMES = ("quarantine", "retransmit")
 DP_META_BYTES = 12   # fp32 clip + fp32 sigma + int32 stream id
 
 
@@ -123,6 +131,10 @@ class CommLedger:
         would have recorded (the bit-exactness comparison surface)."""
         return [e for e in self.events if e.name not in PRIVACY_NAMES]
 
+    def fault_overhead_bytes(self) -> int:
+        """Wire bytes wasted on faults: quarantined and lost uploads."""
+        return sum(e.bytes for e in self.events if e.name in FAULT_NAMES)
+
     # -- hop accounting (hierarchical aggregation) ----------------------- #
     def by_hop(self, direction: Optional[str] = None) -> Dict[str, int]:
         out = collections.defaultdict(int)
@@ -144,7 +156,8 @@ class CommLedger:
         they add."""
         view = CommLedger()
         view.events = [e for e in self.events
-                       if e.name not in PRIVACY_NAMES + EDGE_NAMES]
+                       if e.name not in PRIVACY_NAMES + EDGE_NAMES
+                       + FAULT_NAMES]
         return view
 
 

@@ -86,6 +86,9 @@ class FedResult:
     ledger: M.CommLedger
     final_lora: Dict
     client_flops: List[float]
+    # rounds that failed the participation quorum and rolled over with
+    # the global state unchanged (fault tolerance; 0 without a quorum)
+    rollovers: int = 0
 
     @property
     def final_accuracy(self) -> float:
@@ -198,15 +201,31 @@ class SyncSchedule:
     def starters(self, rnd: int) -> List[int]:
         return list(range(self.n))
 
-    def submit(self, rnd: int, ci: int, payload):
+    def submit(self, rnd: int, ci: int, payload, extra_delay: int = 0):
+        """``extra_delay`` is a fault-injected straggler lag: the upload
+        arrives that many rounds late and flows through the staleness
+        weighting like any async arrival."""
         from repro.core.async_agg import _Job
-        self._pending.append(_Job(ci, rnd, rnd, payload))
+        self._pending.append(_Job(ci, rnd, rnd + extra_delay, payload))
 
     def pop_arrivals(self, rnd: int):
         out = sorted((j for j in self._pending if j.arrival == rnd),
                      key=lambda j: j.client)
         self._pending = [j for j in self._pending if j.arrival != rnd]
         return out
+
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def jobs(self):
+        return list(self._pending)
+
+    def load_jobs(self, jobs):
+        self._pending = list(jobs)
+
+    def rng_state(self):
+        return None
+
+    def load_rng_state(self, state):
+        pass
 
 
 class AsyncSchedule:
@@ -224,14 +243,27 @@ class AsyncSchedule:
     def starters(self, rnd: int) -> List[int]:
         return [ci for ci in range(self.n) if ci not in self.in_flight]
 
-    def submit(self, rnd: int, ci: int, payload):
+    def submit(self, rnd: int, ci: int, payload, extra_delay: int = 0):
         from repro.core.async_agg import _Job
-        self.in_flight[ci] = _Job(ci, rnd, rnd + self.sched.next_delay(ci),
-                                  payload)
+        self.in_flight[ci] = _Job(
+            ci, rnd, rnd + self.sched.next_delay(ci) + extra_delay, payload)
 
     def pop_arrivals(self, rnd: int):
         from repro.core.async_agg import _pop_arrivals
         return _pop_arrivals(self.in_flight, rnd)
+
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def jobs(self):
+        return [self.in_flight[ci] for ci in sorted(self.in_flight)]
+
+    def load_jobs(self, jobs):
+        self.in_flight = {j.client: j for j in jobs}
+
+    def rng_state(self):
+        return self.sched.state()
+
+    def load_rng_state(self, state):
+        self.sched.load_state(state)
 
 
 def make_schedule(fed: FedConfig, n_clients: int):
@@ -551,10 +583,13 @@ def _stream_fold_params(ctx, state, kept, global_tree):
     fed = ctx.fed
     if not kept:
         return state
-    if fed.hetero_agg == "svd" and any(r != fed.lora_rank
-                                       for r in ctx.ranks):
+    # non-linear combines (svd re-factorization, robust order
+    # statistics) cannot stream; buffer the round's arrivals instead
+    if fed.robust_agg != "mean" or (
+            fed.hetero_agg == "svd" and any(r != fed.lora_rank
+                                            for r in ctx.ranks)):
         if state is None:
-            state = ("svd", [])
+            state = ("buf", [])
         state[1].extend(kept)
         return state
     if state is None:
@@ -577,10 +612,10 @@ def _finalize_param_fold(ctx, state, global_tree):
     global tree — ``global_tree`` untouched when nothing was kept."""
     if state is None:
         return global_tree
-    if state[0] == "svd":
-        from repro.core.async_agg import stale_weighted_avg
-        return stale_weighted_avg(global_tree, state[1], ctx.total_w,
-                                  ctx.fed, ctx.ranks)
+    if state[0] == "buf":
+        from repro.core.async_agg import combine_arrivals
+        return combine_arrivals(global_tree, state[1], ctx.total_w,
+                                ctx.fed, ctx.ranks)
     _, acc, w_sum, raw = state
     absent = ctx.total_w - raw
     if absent > 0:
@@ -672,12 +707,18 @@ class FedLLMProgram:
             ctx.ledger.record(rnd, job.client, "dp_meta", M.UP,
                               M.DP_META_BYTES)
 
+    def payload_bytes(self, ctx, payload) -> int:
+        return M.tree_bytes(payload)
+
+    def payload_arrays(self, payload):
+        return jax.tree.leaves(payload)
+
     def aggregate(self, ctx, ex, kept, arrived, rnd):
-        from repro.core.async_agg import stale_weighted_avg
+        from repro.core.async_agg import combine_arrivals
         if kept:
-            self.global_lt = stale_weighted_avg(self.global_lt, kept,
-                                                ctx.total_w, ctx.fed,
-                                                ctx.ranks)
+            self.global_lt = combine_arrivals(self.global_lt, kept,
+                                              ctx.total_w, ctx.fed,
+                                              ctx.ranks)
 
     # -- streaming a4 (cohort executor): fold chunks, finalize once --- #
     def agg_init(self, ctx):
@@ -698,6 +739,13 @@ class FedLLMProgram:
 
     def final_state(self, ctx):
         return self.global_lt
+
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def state_dict(self, ctx):
+        return {"global_lt": self.global_lt}
+
+    def load_state_dict(self, ctx, st):
+        self.global_lt = st["global_lt"]
 
     @staticmethod
     def spmd_round(model, fed: FedConfig, task: str = "classification",
@@ -767,14 +815,29 @@ class KDProgram:
             ctx.ledger.record(rnd, job.client, "dp_meta", M.UP,
                               M.DP_META_BYTES)
 
+    def payload_bytes(self, ctx, payload) -> int:
+        return payload[1]
+
+    def payload_arrays(self, payload):
+        return [payload[0]]
+
     def aggregate(self, ctx, ex, kept, arrived, rnd):
         from repro.core.async_agg import staleness_weight
         fed = ctx.fed
         if kept:
             ws = [w * staleness_weight(s, fed.staleness_decay)
                   for _, _, s, w in kept]
-            teacher = kd_mod.aggregate_knowledge(
-                [p[0] for _, p, _, _ in kept], ws)
+            if fed.robust_agg != "mean":
+                # b4 under a robust combine: order statistics over the
+                # stacked client logits instead of the weighted mean
+                teacher = fed_spmd.robust_client_combine(
+                    jnp.stack([jnp.asarray(p[0], jnp.float32)
+                               for _, p, _, _ in kept]),
+                    jnp.asarray(ws, jnp.float32), fed.robust_agg,
+                    fed.trim_frac, fed.clip_norm)
+            else:
+                teacher = kd_mod.aggregate_knowledge(
+                    [p[0] for _, p, _, _ in kept], ws)
             self.server_lt, self.server_opt, _ = kd_mod.distill(
                 ctx.fns, ctx.base, self.server_lt, self.server_opt,
                 ctx.public, teacher, fed.kd_epochs, ctx.eval_batch,
@@ -798,9 +861,17 @@ class KDProgram:
 
     def agg_fold(self, ctx, ex, state, kept, rnd):
         """Fold one arrival chunk's logits into the running b4 teacher
-        sum (the weighted mean is linear, so it streams exactly)."""
+        sum (the weighted mean is linear, so it streams exactly).  A
+        robust combine is not linear, so it buffers the round's
+        arrivals instead — the same documented O(arrivals-this-round)
+        exception the svd harmonizer makes."""
         from repro.core.async_agg import staleness_weight
         if not kept:
+            return state
+        if ctx.fed.robust_agg != "mean":
+            if state is None:
+                state = ["buf", []]
+            state[1].extend(kept)
             return state
         if state is None:
             state = [None, 0.0]
@@ -817,7 +888,16 @@ class KDProgram:
         """b5 server distill from the normalized teacher, then the
         b6-b8 re-sync streamed over the arrived clients in cohort-sized
         chunks (one stacked distill program per chunk)."""
+        from repro.core.async_agg import staleness_weight
         fed = ctx.fed
+        if state is not None and isinstance(state[0], str):   # robust buffer
+            ws = [w * staleness_weight(s, fed.staleness_decay)
+                  for _, _, s, w in state[1]]
+            state = [fed_spmd.robust_client_combine(
+                jnp.stack([jnp.asarray(p[0], jnp.float32)
+                           for _, p, _, _ in state[1]]),
+                jnp.asarray(ws, jnp.float32), fed.robust_agg,
+                fed.trim_frac, fed.clip_norm), 1.0]
         if state is not None and state[1] > 0:
             teacher = (state[0] / np.float32(state[1])).astype(jnp.float32)
             self.server_lt, self.server_opt, _ = kd_mod.distill(
@@ -849,6 +929,22 @@ class KDProgram:
     def final_state(self, ctx):
         return self.server_lt
 
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def state_dict(self, ctx):
+        """Only the *materialized* client adapters are snapshotted —
+        untouched clients re-materialize from the fold_in(key, ci)
+        factory bit-identically on resume."""
+        return {"lts": dict(self.lts._vals), "opts": dict(self.opts._vals),
+                "server_lt": self.server_lt, "server_opt": self.server_opt,
+                "glob": self.glob}
+
+    def load_state_dict(self, ctx, st):
+        self.lts._vals = dict(st["lts"])
+        self.opts._vals = dict(st["opts"])
+        self.server_lt = st["server_lt"]
+        self.server_opt = st["server_opt"]
+        self.glob = st["glob"]
+
     @staticmethod
     def spmd_round(model, fed: FedConfig, task: str = "classification"):
         """The jittable whole-round program for the launch layer:
@@ -876,7 +972,13 @@ class KDProgram:
                             logits, noise_keys)
                 else:
                     logits = dp_mod.privatize_rows(logits, None, fed)
-            teacher = kd_mod.aggregate_knowledge_batched(logits, weights)
+            if fed.robust_agg != "mean":
+                teacher = fed_spmd.robust_client_combine(
+                    logits.astype(jnp.float32), weights, fed.robust_agg,
+                    fed.trim_frac, fed.clip_norm)
+            else:
+                teacher = kd_mod.aggregate_knowledge_batched(logits,
+                                                             weights)
             server_lt, server_opt, _ = fns["kd_step"](
                 base, server_lt, server_opt, public_batch, teacher,
                 server_key)
@@ -956,12 +1058,18 @@ class SplitProgram:
         ctx.ledger.record(rnd, job.client, "lora_params", M.UP,
                           M.tree_bytes(job.payload))                   # cc1
 
+    def payload_bytes(self, ctx, payload) -> int:
+        return M.tree_bytes(payload)
+
+    def payload_arrays(self, payload):
+        return jax.tree.leaves(payload)
+
     def aggregate(self, ctx, ex, kept, arrived, rnd):
-        from repro.core.async_agg import stale_weighted_avg
+        from repro.core.async_agg import combine_arrivals
         if kept:                                                       # cc2
-            self.c_global = stale_weighted_avg(self.c_global, kept,
-                                               ctx.total_w, ctx.fed,
-                                               ctx.ranks)
+            self.c_global = combine_arrivals(self.c_global, kept,
+                                             ctx.total_w, ctx.fed,
+                                             ctx.ranks)
         self.joined = split_mod.join_lora(self.c_global, self.s_lt)
 
     # -- streaming cc2 (cohort executor) ------------------------------ #
@@ -985,6 +1093,16 @@ class SplitProgram:
     def final_state(self, ctx):
         return self.joined
 
+    # -- checkpoint/resume (checkpoint/federated.py) --------------------- #
+    def state_dict(self, ctx):
+        return {"c_global": self.c_global, "s_lt": self.s_lt,
+                "s_opt": self.s_opt}
+
+    def load_state_dict(self, ctx, st):
+        self.c_global, self.s_lt = st["c_global"], st["s_lt"]
+        self.s_opt = st["s_opt"]
+        self.joined = split_mod.join_lora(self.c_global, self.s_lt)
+
     @staticmethod
     def spmd_round(model, fed: FedConfig, task: str = "generative",
                    sfns=None, client_sharding=None):
@@ -1007,11 +1125,31 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
                 public: Dict, clients_data: List[Dict], test: Dict,
                 task: str, batch_size: int, eval_batch: int,
                 verbose: bool, backend: str = "sequential",
-                mesh=None) -> FedResult:
+                mesh=None, checkpoint_every: int = 0,
+                checkpoint_dir: str = None,
+                resume_from: str = None) -> FedResult:
     """Run ``fed.rounds`` federated rounds of ``fed.framework`` through
     the composed pipeline.  ``backend`` selects the executor; ``mesh``
     (optional) makes the SPMD executor shard the stacked client axis
-    over the mesh's client axes."""
+    over the mesh's client axes.
+
+    Fault tolerance (src/repro/faults/): when ``fed.faults`` is active
+    a seeded FaultPlan drops, delays, or corrupts uploads at the
+    injection seam between local_update and upload; every arrival then
+    passes the validation middleware (finite check + optional norm
+    screen), offenders are quarantined (ledger ``quarantine`` events,
+    secure-agg discard -> the cohort's survivors run the normal mask
+    recovery), and a round whose surviving arrivals fall below
+    ``fed.quorum`` x |starters| rolls over deterministically with the
+    global state unchanged.
+
+    Crash recovery: ``checkpoint_every > 0`` snapshots the complete run
+    state (program params/optimizers, in-flight payloads, schedule RNG,
+    secure-agg session, ledger, history, release counters) into
+    ``checkpoint_dir`` after every k-th round via
+    checkpoint/federated.py; ``resume_from`` restores the latest
+    snapshot in a directory and continues — bit-exactly equal to the
+    uninterrupted run (ledger bytes, metrics, final params)."""
     ctx = RoundContext(model, base, cfg, fed, targets, public,
                        clients_data, test, task, batch_size, eval_batch,
                        verbose)
@@ -1033,7 +1171,59 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
     tag = f"{fed.framework}/{backend}" + \
         ("/async" if fed.aggregation == "async" else "")
 
-    for rnd in range(fed.rounds):
+    # -- fault-tolerance middleware ------------------------------------- #
+    plan = None
+    if fed.faults.enabled:
+        from repro.faults import FaultPlan
+        plan = FaultPlan(fed, ctx.n_clients)
+
+    def _submit(outs, rnd):
+        """The upload seam: Byzantine corruption happens BEFORE the
+        upload stage (so privacy noise / compression / secure-agg
+        masking all apply to what the corrupt client actually sends),
+        dropout loses the payload after it (the bytes were spent —
+        charged as ``retransmit``), stragglers submit with extra lag."""
+        if plan is not None:
+            outs = [(ci, plan.corrupt(p, rnd, ci)) for ci, p in outs]
+        for ci, payload in program.upload(ctx, outs, rnd):
+            if plan is not None and plan.dropped(rnd, ci):
+                ctx.ledger.record(rnd, ci, "retransmit", M.UP,
+                                  program.payload_bytes(ctx, payload))
+                ctx.secagg.discard(ctx.secagg_start(rnd, ci), ci)
+                continue
+            extra = plan.extra_delay(rnd, ci) if plan is not None else 0
+            schedule.submit(rnd, ci, payload, extra)
+
+    def _screen(arrivals):
+        """Validation verdicts for the whole round's arrivals at once
+        (norm screen medians are round-global, so flat and streaming
+        drivers quarantine the identical set)."""
+        if not arrivals:
+            return []
+        from repro.faults import guard as fault_guard
+        return fault_guard.screen(
+            [program.payload_arrays(j.payload) for j in arrivals],
+            fed.screen_factor)
+
+    def _quarantine(j, rnd):
+        ctx.ledger.record(rnd, j.client, "quarantine", M.UP,
+                          program.payload_bytes(ctx, j.payload))
+        ctx.secagg.discard(ctx.secagg_start(j.start, j.client), j.client)
+
+    # -- crash recovery -------------------------------------------------- #
+    mgr = None
+    if checkpoint_every and checkpoint_every > 0:
+        if not checkpoint_dir:
+            raise ValueError("checkpoint_every requires checkpoint_dir")
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(checkpoint_dir)
+    start_rnd, rollovers = 0, 0
+    if resume_from:
+        from repro.checkpoint import federated as fed_ckpt
+        start_rnd, rollovers = fed_ckpt.restore_run(resume_from, ctx,
+                                                    program, schedule)
+
+    for rnd in range(start_rnd, fed.rounds):
         # start cohort: free clients pull state and form this round's
         # secure-agg masking cohort (payloads are created — and masked —
         # now, even when they deliver rounds later)
@@ -1052,14 +1242,12 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
                                         cohort_id=cid)
                 jobs = program.broadcast(ctx, chunk, rnd)
                 outs = program.local_update(ctx, ex, jobs, rnd)
-                for ci, payload in program.upload(ctx, outs, rnd):
-                    schedule.submit(rnd, ci, payload)
+                _submit(outs, rnd)
         else:
             ctx.secagg.begin_cohort(ctx.ledger, rnd, starters)
             jobs = program.broadcast(ctx, starters, rnd)
             outs = program.local_update(ctx, ex, jobs, rnd)
-            for ci, payload in program.upload(ctx, outs, rnd):
-                schedule.submit(rnd, ci, payload)
+            _submit(outs, rnd)
         # arrivals: record wire traffic, drop too-stale updates (their
         # pairwise masks recovered like any absent cohort member's)
         if streaming:
@@ -1068,15 +1256,23 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
             # secagg payloads before touching the next — peak memory is
             # one cohort of payloads plus one fp32 accumulator
             arrivals = schedule.pop_arrivals(rnd)
+            ok = _screen(arrivals)
+            n_kept = sum(1 for j, good in zip(arrivals, ok)
+                         if good and rnd - j.start <= fed.max_staleness)
+            roll = bool(fed.quorum > 0 and starters
+                        and n_kept < fed.quorum * len(starters))
             groups: Dict[int, List] = {}
-            for j in arrivals:
+            for j, good in zip(arrivals, ok):
                 groups.setdefault(ctx.secagg_start(j.start, j.client),
-                                  []).append(j)
+                                  []).append((j, good))
             state = program.agg_init(ctx)
             arrived_cis, used_edges = [], set()
             for gi, (gkey, gjobs) in enumerate(groups.items()):
                 kept_chunk, delivered = [], []
-                for j in gjobs:
+                for j, good in gjobs:
+                    if not good:
+                        _quarantine(j, rnd)
+                        continue
                     arrived_cis.append(j.client)
                     program.record_arrival(ctx, j, rnd)
                     s = rnd - j.start
@@ -1087,8 +1283,16 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
                     else:
                         ctx.secagg.discard(gkey, j.client)
                 ctx.secagg.deliver(ctx.ledger, rnd, delivered)
-                state = program.agg_fold(ctx, ex, state, kept_chunk, rnd)
+                if not roll:
+                    state = program.agg_fold(ctx, ex, state, kept_chunk,
+                                             rnd)
                 used_edges.add(gi % n_edges)
+            if roll:
+                # below quorum: the cohort's payloads were received and
+                # their secure-agg masks settled, but the round rolls
+                # over — nothing folds into the global state
+                rollovers += 1
+                state, arrived_cis = None, []
             program.agg_finalize(ctx, ex, state, arrived_cis, rnd)
             if hierarchical and arrived_cis:
                 # second hop: each edge that aggregated a cohort this
@@ -1102,8 +1306,13 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
                                       eb, hop=M.EDGE_SERVER)
             arrived_n = len(arrived_cis)
         else:
+            arrivals = schedule.pop_arrivals(rnd)
+            ok = _screen(arrivals)
             kept, delivered, arrived = [], [], []
-            for j in schedule.pop_arrivals(rnd):
+            for j, good in zip(arrivals, ok):
+                if not good:
+                    _quarantine(j, rnd)
+                    continue
                 arrived.append(j)
                 program.record_arrival(ctx, j, rnd)
                 s = rnd - j.start
@@ -1114,16 +1323,23 @@ def run_program(model, base, cfg: ModelConfig, fed: FedConfig, targets,
                 else:
                     ctx.secagg.discard(j.start, j.client)
             ctx.secagg.deliver(ctx.ledger, rnd, delivered)
+            if fed.quorum > 0 and starters \
+                    and len(kept) < fed.quorum * len(starters):
+                rollovers += 1
+                kept, arrived = [], []
             program.aggregate(ctx, ex, kept, arrived, rnd)
             arrived_n = len(arrived)
         acc, loss = program.evaluate(ctx)
         ctx.history.append(M.RoundMetrics(
             rnd, acc, loss, ctx.ledger.mean_client_bytes_per_round(),
-            float(np.mean([c.flops for c in ctx.cost])),
+            float(np.mean([c.flops for c in ctx.cost])) if ctx.cost else 0.0,
             epsilon=round_epsilon(ctx.acct, max(ctx.releases, default=0))))
         if verbose:
             print(f"[{tag}] round {rnd}: acc={acc:.4f} loss={loss:.4f}"
                   + (f" arrived={arrived_n}"
                      if fed.aggregation == "async" else ""))
+        if mgr is not None and (rnd + 1) % checkpoint_every == 0:
+            from repro.checkpoint import federated as fed_ckpt
+            fed_ckpt.save_run(mgr, ctx, program, schedule, rnd, rollovers)
     return FedResult(ctx.history, ctx.ledger, program.final_state(ctx),
-                     [c.flops for c in ctx.cost])
+                     [c.flops for c in ctx.cost], rollovers=rollovers)

@@ -86,7 +86,9 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
                   test: Dict = None,
                   task: str = "classification", batch_size: int = 16,
                   eval_batch: int = 64, verbose: bool = False,
-                  mesh=None, clients_data: List[Dict] = None) -> FedResult:
+                  mesh=None, clients_data: List[Dict] = None,
+                  checkpoint_every: int = 0, checkpoint_dir: str = None,
+                  resume_from: str = None) -> FedResult:
     clients = _normalize_clients(clients, clients_data)
     if test is None:
         raise TypeError("run_federated() missing required argument: "
@@ -109,6 +111,20 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
             "privacy.dp_noise_multiplier > 0 requires privacy.dp_clip > 0 "
             "(the noise stddev is sigma * clip; an unclipped release has "
             "unbounded sensitivity and no (eps, delta) guarantee)")
+    if fed.robust_agg not in ("mean", "median", "trimmed_mean",
+                              "norm_clip"):
+        raise ValueError(f"unknown robust_agg {fed.robust_agg!r}")
+    if not 0.0 <= fed.trim_frac < 0.5:
+        raise ValueError("trim_frac must be in [0, 0.5): trimming half "
+                         "the cohort from each side leaves nothing")
+    if not 0.0 <= fed.quorum <= 1.0:
+        raise ValueError("quorum is a fraction of the round's starters "
+                         "and must be in [0, 1]")
+    for rate in (fed.faults.dropout_rate, fed.faults.straggler_rate):
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError("fault rates are probabilities in [0, 1]")
+    if checkpoint_every > 0 and not checkpoint_dir:
+        raise ValueError("checkpoint_every > 0 requires checkpoint_dir")
     client_lora_ranks(fed, len(clients))   # validate early
     model = build_model(cfg)
     key = jax.random.PRNGKey(fed.seed)
@@ -123,4 +139,6 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, public: Dict,
         return run_program(model, base, cfg, fed, targets, public,
                            clients, test, task, batch_size,
                            eval_batch, verbose, backend=backend,
-                           mesh=mesh)
+                           mesh=mesh, checkpoint_every=checkpoint_every,
+                           checkpoint_dir=checkpoint_dir,
+                           resume_from=resume_from)

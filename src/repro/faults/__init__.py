@@ -1,0 +1,8 @@
+"""Fault tolerance for the federated round engine.
+
+``plan.FaultPlan`` injects seeded dropouts, straggler delays, and
+Byzantine payload corruption into any framework x backend x schedule
+combo; ``guard`` holds the upload-seam validation helpers (finite
+check + norm screen) the round driver quarantines offenders with.
+"""
+from repro.faults.plan import FaultPlan  # noqa: F401

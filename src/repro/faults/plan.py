@@ -1,0 +1,100 @@
+"""Seeded fault-injection plan for the round engine.
+
+Every fault decision is a pure function of ``(FedConfig.seed,
+FaultConfig.seed, round, client)`` via the ``core/rng.host_fold_rng``
+fold-in chain, domain-separated from the dropout / privacy / batching
+streams by the ``_FAULT_STREAM`` tag.  That makes a faulted run exactly
+reproducible across frameworks, backends, and schedules — and across a
+checkpoint/resume boundary, since the plan carries no mutable state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_mod
+
+# Domain-separation tag for the fault stream (never collides with the
+# dropout `seed*1013+...` roots or the privacy fold chains).
+_FAULT_STREAM = 0xFA17
+
+BYZANTINE_MODES = ("nan", "inf", "sign_flip", "norm_inflation")
+
+
+class FaultPlan:
+    """Deterministic per-(round, client) fault decisions.
+
+    * ``dropped(rnd, ci)``   — the upload is lost in transit.
+    * ``extra_delay(rnd, ci)`` — extra rounds the upload takes to arrive
+      (feeds the ParticipationSchedule's arrival time).
+    * ``corrupts(ci)``       — ci is one of the ``byzantine`` clients (a
+      seeded fixed subset of the population, chosen once per plan).
+    * ``corrupt(payload, rnd, ci)`` — apply the Byzantine mode to every
+      float leaf of a payload pytree.
+    """
+
+    def __init__(self, fed, n_clients: int):
+        fc = fed.faults
+        if fc.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(
+                f"unknown byzantine_mode {fc.byzantine_mode!r} "
+                f"(expected one of {BYZANTINE_MODES})")
+        if fc.byzantine > n_clients:
+            raise ValueError(
+                f"byzantine={fc.byzantine} exceeds n_clients={n_clients}")
+        self.fed, self.fc, self.n_clients = fed, fc, n_clients
+        if fc.byzantine > 0:
+            perm = rng_mod.host_fold_rng(
+                fed.seed, _FAULT_STREAM, fc.seed).permutation(n_clients)
+            self.byzantine = frozenset(int(c) for c in perm[:fc.byzantine])
+        else:
+            self.byzantine = frozenset()
+
+    # ------------------------------------------------------------------ #
+    def _draws(self, rnd: int, ci: int) -> Tuple[float, float]:
+        """(dropout_draw, straggler_draw) — a fixed draw order per
+        (round, client) so toggling one fault kind never shifts the
+        other's stream."""
+        g = rng_mod.host_fold_rng(
+            self.fed.seed, _FAULT_STREAM, self.fc.seed, rnd, ci)
+        return float(g.uniform()), float(g.uniform())
+
+    def dropped(self, rnd: int, ci: int) -> bool:
+        if self.fc.dropout_rate <= 0.0:
+            return False
+        return self._draws(rnd, ci)[0] < self.fc.dropout_rate
+
+    def extra_delay(self, rnd: int, ci: int) -> int:
+        if self.fc.straggler_rate <= 0.0:
+            return 0
+        if self._draws(rnd, ci)[1] < self.fc.straggler_rate:
+            return int(self.fc.straggler_delay)
+        return 0
+
+    # ------------------------------------------------------------------ #
+    def corrupts(self, ci: int) -> bool:
+        return ci in self.byzantine
+
+    def corrupt(self, payload, rnd: int, ci: int):
+        """Byzantine-corrupt every float leaf of ``payload`` (other
+        leaves — wire-byte ints, masks — pass through untouched)."""
+        if not self.corrupts(ci):
+            return payload
+        mode, scale = self.fc.byzantine_mode, self.fc.byzantine_scale
+
+        def leaf(x):
+            if not hasattr(x, "dtype") or not jnp.issubdtype(
+                    jnp.asarray(x).dtype, jnp.floating):
+                return x
+            x = jnp.asarray(x)
+            if mode == "nan":
+                return jnp.full_like(x, jnp.nan)
+            if mode == "inf":
+                return jnp.full_like(x, jnp.inf)
+            if mode == "sign_flip":
+                return -x
+            return x * jnp.asarray(scale, x.dtype)   # norm_inflation
+
+        return jax.tree.map(leaf, payload)

@@ -46,7 +46,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             dp_clip: float = 0.0, dp_noise_multiplier: float = 0.0,
             secure_agg: bool = False, backend: str = "spmd",
             shard_clients: bool = False, n_clients: int = None,
-            population: str = None, cohort_size: int = None) -> dict:
+            population: str = None, cohort_size: int = None,
+            robust_agg: str = "mean", faults: str = None) -> dict:
     from repro.configs.base import PrivacyConfig
 
     if step == "fed_round" and backend not in ("spmd", "cohort"):
@@ -77,6 +78,32 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     if cohort_size:
         n_clients = cohort_size if n_clients is None \
             else min(n_clients, cohort_size)
+    # --faults dropout:0.2,byzantine:2,...: fault injection is host-side
+    # (faults/plan.py draws from the seed tree and corrupts payloads at
+    # the upload seam), so it never changes the compiled round — the
+    # record keeps the scenario; --robust-agg DOES change the program
+    # (the closing client-axis reduction becomes the robust statistic).
+    fault_cfg = None
+    if faults:
+        from repro.configs.base import FaultConfig
+        keymap = {"dropout": ("dropout_rate", float),
+                  "straggler": ("straggler_rate", float),
+                  "delay": ("straggler_delay", int),
+                  "byzantine": ("byzantine", int),
+                  "mode": ("byzantine_mode", str),
+                  "scale": ("byzantine_scale", float)}
+        kw = {}
+        try:
+            for item in faults.split(","):
+                k, v = item.split(":")
+                field, cast = keymap[k]
+                kw[field] = cast(v)
+        except (ValueError, KeyError):
+            raise ValueError(
+                f"bad --faults {faults!r} (expected comma-separated "
+                f"key:value with keys {sorted(keymap)}, e.g. "
+                "dropout:0.2,byzantine:2)")
+        fault_cfg = FaultConfig(**kw)
     cfg = get_config(arch)
     if kernel_policy:
         # thread ModelConfig.kernel_policy through the lowering path —
@@ -105,6 +132,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         # arrival schedule is host-side — so the compile artifact is the
         # sync one; the record keeps the axis visible in sweeps.
         rec["aggregation"] = aggregation
+        if robust_agg != "mean":
+            rec["robust_agg"] = robust_agg
+        if fault_cfg is not None:
+            rec["faults"] = faults
+            rec["fault_config"] = dataclasses.asdict(fault_cfg)
         if client_ranks:
             rec["client_ranks"] = list(client_ranks)
         if privacy.enabled:
@@ -162,7 +194,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                 t0 = time.time()
                 if step == "fed_round":
                     fed_kw = dict(framework=fed_framework, privacy=privacy,
-                                  shard_clients=shard_clients)
+                                  shard_clients=shard_clients,
+                                  robust_agg=robust_agg)
                     if n_clients is not None:
                         fed_kw["n_clients"] = n_clients
                     if cohort_size:
@@ -210,6 +243,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                         "dp_clip_mean_rows kernel is not in the traced "
                         "jaxpr — the DP-SGD path did not reach the "
                         "jitted round")
+
+            if step == "fed_round" and robust_agg in ("median",
+                                                      "trimmed_mean"):
+                # verify the robust statistic reached the jitted round:
+                # both median and trimmed mean lower through a sort on
+                # the stacked client axis, which plain FedAvg never emits
+                txt = str(jax.make_jaxpr(fn)(*args))
+                in_jaxpr = "sort" in txt
+                rec["robust_sort_in_jaxpr"] = in_jaxpr
+                if not in_jaxpr:
+                    raise RuntimeError(
+                        f"--robust-agg {robust_agg} but no sort appears "
+                        "in the traced jaxpr — the robust reduction did "
+                        "not reach the jitted round")
 
             if step == "fed_round" and shard_clients:
                 # acceptance gate: the client-axis NamedSharding must be
@@ -366,6 +413,18 @@ def main():
                     help="Gaussian noise multiplier sigma (payload noise "
                          "stddev = sigma * clip); adds the per-client "
                          "noise-key inputs to the lowered round")
+    ap.add_argument("--robust-agg", default="mean",
+                    choices=["mean", "median", "trimmed_mean", "norm_clip"],
+                    help="Byzantine-robust closing reduction for --step "
+                         "fed_round; median/trimmed_mean are verified to "
+                         "reach the traced jaxpr (they lower via sort)")
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault-injection scenario to record, as "
+                         "comma-separated key:value — e.g. "
+                         "dropout:0.2,byzantine:2,mode:sign_flip "
+                         "(keys: dropout, straggler, delay, byzantine, "
+                         "mode, scale); host-side, does not change the "
+                         "compiled program")
     ap.add_argument("--secure-agg", action="store_true",
                     help="record the simulated secure-aggregation "
                          "overlay (host-side masking; key-exchange "
@@ -404,7 +463,9 @@ def main():
                                    shard_clients=args.shard_clients,
                                    n_clients=args.n_clients,
                                    population=args.population,
-                                   cohort_size=args.cohort_size))
+                                   cohort_size=args.cohort_size,
+                                   robust_agg=args.robust_agg,
+                                   faults=args.faults))
 
     ok = sum(r["status"] == "OK" for r in records)
     skip = sum(r["status"] == "SKIP" for r in records)

@@ -136,7 +136,8 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
                          framework: str = "fedllm",
                          privacy: PrivacyConfig = None,
                          shard_clients: bool = False,
-                         cohort_size: int = 0, n_edges: int = 1):
+                         cohort_size: int = 0, n_edges: int = 1,
+                         robust_agg: str = "mean"):
     """Multi-pod federated round for any of the three frameworks, built
     from the SAME stage-specs the runtime pipeline runs
     (core/round_program.FrameworkProgram.spmd_round): clients on the
@@ -158,6 +159,11 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
     the traced program under ``kernel_policy="pallas"`` — dryrun verifies
     this), DP payload/activation noise from extra noise-key inputs, and
     the b3/c2 mechanisms of the KD/Split rounds.
+
+    ``robust_agg`` swaps the closing client-axis reduction for the
+    Byzantine-robust statistic (core/fed_spmd.robust_client_combine) —
+    coordinate-wise median / trimmed mean / norm-clipped mean — in the
+    lowered program, exactly as the runtime round does.
 
     ``cohort_size`` > 0 clamps the stacked client axis to one cohort:
     the compiled artifact under cohort streaming is the per-chunk
@@ -239,11 +245,11 @@ def build_fed_round_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
         weights_sh=weights_sh, stacked_batch=_stacked_batch,
         batch_sh=_batch_sh, privacy=privacy,
         client_keys_shape=client_keys_shape, ckeys_sh=ckeys_sh,
-        shard_clients=shard_clients)
+        shard_clients=shard_clients, robust_agg=robust_agg)
 
     if framework == "fedllm":
         fed = FedConfig(lora_rank=lora_rank, lora_alpha=LORA_ALPHA,
-                        privacy=privacy)
+                        privacy=privacy, robust_agg=robust_agg)
         round_step = round_program.FedLLMProgram.spmd_round(
             model, fed, task="generative", n_edges=n_edges)
         batch_shape = _stacked_batch(False)
@@ -274,7 +280,7 @@ def _build_kd_round(ctx):
     policy, shape = ctx.policy, ctx.shape
     fed = FedConfig(framework="kd", lora_rank=ctx.lora_rank,
                     lora_alpha=LORA_ALPHA, lora_dropout=0.0,
-                    privacy=ctx.privacy)
+                    privacy=ctx.privacy, robust_agg=ctx.robust_agg)
     noised = ctx.privacy.noise_std > 0.0
     kd_round_core = round_program.KDProgram.spmd_round(
         ctx.model, fed, task="classification")
@@ -324,7 +330,7 @@ def _build_split_round(ctx):
     model, policy = ctx.model, ctx.policy
     fed = FedConfig(framework="split", lora_rank=ctx.lora_rank,
                     lora_alpha=LORA_ALPHA, lora_dropout=0.0,
-                    privacy=ctx.privacy)
+                    privacy=ctx.privacy, robust_agg=ctx.robust_agg)
     sfns = split_mod.make_split_fns(model, fed, task="generative")
     L = sfns["n_client_groups"]
     client_sharding = (

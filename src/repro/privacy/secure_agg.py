@@ -57,8 +57,12 @@ def flat_fixed_point(payload, frac_bits: int) -> np.ndarray:
     leaves = [np.asarray(x, np.float64).ravel()
               for x in jax.tree.leaves(payload)]
     flat = np.concatenate(leaves) if leaves else np.zeros(0, np.float64)
-    return np.round(flat * float(1 << frac_bits)).astype(
-        np.int64).astype(np.uint64)
+    # fault-injected NaN/Inf payloads pass through here before the
+    # validation seam quarantines them — silence the cast warning, the
+    # (garbage) encoding is discarded with the payload
+    with np.errstate(invalid="ignore"):
+        return np.round(flat * float(1 << frac_bits)).astype(
+            np.int64).astype(np.uint64)
 
 
 class SecureAggSession:
@@ -189,6 +193,28 @@ class SecureAggSession:
         (its pairwise masks are recovered by later events as usual)."""
         if self.enabled:
             self._plain.pop((start_rnd, ci), None)
+
+    # -- checkpoint/resume (checkpoint/federated.py) ----------------------- #
+    def state_dict(self) -> dict:
+        """Mutable session state for crash recovery.  Keys are
+        stringified for the JSON manifest; the fixed-point vectors stay
+        raw uint64 arrays (bit-exact transport)."""
+        return {
+            "cohorts": {str(k): [int(x) for x in v]
+                        for k, v in self._cohorts.items()},
+            "size": {str(k): int(v) for k, v in self._size.items()},
+            "plain": {f"{s}:{c}": q for (s, c), q in self._plain.items()},
+        }
+
+    def load_state_dict(self, st: dict):
+        self._cohorts = {int(k): [int(x) for x in v]
+                         for k, v in st["cohorts"].items()}
+        self._size = {int(k): int(v) for k, v in st["size"].items()}
+        self._plain = {}
+        for key, q in st["plain"].items():
+            s, c = key.split(":")
+            # stays numpy: jnp.asarray would downcast uint64 without x64
+            self._plain[(int(s), int(c))] = np.asarray(q, np.uint64)
 
 
 def key_exchange_bytes(cohort_size: int) -> Tuple[int, int]:

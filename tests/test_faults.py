@@ -1,0 +1,307 @@
+"""Fault tolerance: seeded fault injection (faults/plan.py), the
+upload-seam validation middleware and quorum gate
+(core/round_program.py), Byzantine-robust aggregation
+(core/fed_spmd.robust_client_combine) and bit-exact checkpoint/resume
+(checkpoint/federated.py).
+
+The acceptance properties pinned here:
+
+- zero-fault robust-aggregation runs report the SAME ledger bytes as
+  the plain engines (the robust statistic changes math, never wire
+  sizes);
+- a killed run resumed from its last checkpoint finishes bit-identical
+  to an uninterrupted one — ledger events, metric history and final
+  params — for all three frameworks (incl. async + secure-agg, whose
+  in-flight payloads, schedule RNGs and mask vectors all checkpoint);
+- with dropouts and Byzantine clients injected, every engine completes
+  all rounds, quarantines the poisoned payloads, and the final model is
+  finite;
+- trimmed-mean aggregation holds accuracy near the clean run with a
+  corrupt client in the cohort.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FaultConfig, FedConfig
+from repro.configs.gpt2_small import gpt2_tiny
+from repro.core import fed_spmd
+from repro.core.rounds import run_federated
+from repro.data import banking77, partition
+from repro.faults.plan import FaultPlan
+
+FRAMEWORKS = ("fedllm", "kd", "split")
+
+
+@pytest.fixture(scope="module")
+def case_study():
+    cfg = gpt2_tiny()
+    pub, tr, te = banking77.paper_splits(cfg.vocab_size, pad_len=24,
+                                         scale=0.04)
+    clients = partition.iid_partition(tr, 3)
+    return cfg, pub, clients, te
+
+
+def _fed(fw, **kw):
+    base = dict(framework=fw, n_clients=3, rounds=2, lora_rank=4,
+                lora_dropout=0.0, split_layer=2, kd_epochs=1, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(case, fed, **kw):
+    cfg, pub, clients, te = case
+    return run_federated(cfg, fed, pub, clients, te, batch_size=16,
+                         eval_batch=64, **kw)
+
+
+def _assert_trees_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+def _finite(tree):
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(tree))
+
+
+# --------------------------------------------------------------------------- #
+# FaultPlan: seeded, deterministic, mode-correct
+# --------------------------------------------------------------------------- #
+def test_fault_plan_deterministic():
+    fed = _fed("fedllm", faults=FaultConfig(dropout_rate=0.3,
+                                            straggler_rate=0.3,
+                                            byzantine=1))
+    a, b = FaultPlan(fed, 3), FaultPlan(fed, 3)
+    for rnd in range(5):
+        for ci in range(3):
+            assert a.dropped(rnd, ci) == b.dropped(rnd, ci)
+            assert a.extra_delay(rnd, ci) == b.extra_delay(rnd, ci)
+    assert a.byzantine == b.byzantine
+    assert len(a.byzantine) == 1
+
+
+def test_fault_plan_seed_moves_faults():
+    fed = _fed("fedllm", faults=FaultConfig(dropout_rate=0.5, seed=0))
+    other = _fed("fedllm", faults=FaultConfig(dropout_rate=0.5, seed=1))
+    grid = lambda p: [p.dropped(r, c) for r in range(8) for c in range(3)]
+    assert grid(FaultPlan(fed, 3)) != grid(FaultPlan(other, 3))
+
+
+def test_fault_plan_corruption_modes():
+    x = {"w": jnp.ones((2, 3), jnp.float32),
+         "i": jnp.arange(3)}               # int leaf must pass through
+    for mode, check in [
+            ("nan", lambda y: np.isnan(y).all()),
+            ("inf", lambda y: np.isinf(y).all()),
+            ("sign_flip", lambda y: np.array_equal(y, -np.ones((2, 3)))),
+            ("norm_inflation",
+             lambda y: np.allclose(y, 100.0 * np.ones((2, 3))))]:
+        fed = _fed("fedllm", faults=FaultConfig(byzantine=1,
+                                                byzantine_mode=mode))
+        plan = FaultPlan(fed, 3)
+        (bad_ci,) = plan.byzantine
+        out = plan.corrupt(x, 0, bad_ci)
+        assert check(np.asarray(out["w"])), mode
+        np.testing.assert_array_equal(np.asarray(out["i"]),
+                                      np.arange(3), err_msg=mode)
+        # non-byzantine clients are untouched
+        ok_ci = next(c for c in range(3) if c not in plan.byzantine)
+        _assert_trees_equal(plan.corrupt(x, 0, ok_ci), x, mode)
+
+
+# --------------------------------------------------------------------------- #
+# robust_client_combine: numpy reference + degenerate cohorts
+# --------------------------------------------------------------------------- #
+def test_robust_combine_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    stack = {"a": jnp.asarray(rng.normal(size=(5, 3, 2)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(0.5, 2.0, 5), jnp.float32)
+
+    med = fed_spmd.robust_client_combine(stack, w, "median")
+    np.testing.assert_allclose(np.asarray(med["a"]),
+                               np.median(np.asarray(stack["a"]), axis=0),
+                               rtol=1e-6)
+
+    tm = fed_spmd.robust_client_combine(stack, w, "trimmed_mean",
+                                        trim_frac=0.2)
+    ref = np.sort(np.asarray(stack["b"]), axis=0)[1:-1].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(tm["b"]), ref, rtol=1e-5)
+
+    # norm_clip with a huge threshold degrades to the weighted mean
+    nc = fed_spmd.robust_client_combine(stack, w, "norm_clip",
+                                        clip_norm=1e9)
+    plain = fed_spmd.weighted_client_mean(stack, w)
+    np.testing.assert_allclose(np.asarray(nc["a"]), np.asarray(plain["a"]),
+                               rtol=1e-5, atol=1e-6)
+
+    with pytest.raises(ValueError):
+        fed_spmd.robust_client_combine(stack, w, "mode")
+
+
+def test_robust_combine_rejects_outlier():
+    good = np.ones((4, 8), np.float32)
+    stack = {"a": jnp.asarray(np.concatenate([good, 1e6 * good[:1]]))}
+    w = jnp.ones(5, jnp.float32)
+    for method, kw in [("median", {}),
+                       ("trimmed_mean", {"trim_frac": 0.25}),
+                       ("norm_clip", {})]:
+        out = fed_spmd.robust_client_combine(stack, w, method, **kw)
+        assert np.abs(np.asarray(out["a"])).max() < 100.0, method
+
+
+def test_zero_weight_guards():
+    from repro.core.fedavg import fedavg
+    from repro.core.kd import aggregate_knowledge
+
+    stack = {"a": jnp.asarray([[1.0, 2.0], [3.0, 4.0]], jnp.float32)}
+    zero = jnp.zeros(2, jnp.float32)
+    out = fed_spmd.weighted_client_mean(stack, zero)
+    np.testing.assert_allclose(np.asarray(out["a"]), [2.0, 3.0])
+
+    trees = [{"a": jnp.ones(2, jnp.float32)},
+             {"a": 3.0 * jnp.ones(2, jnp.float32)}]
+    out = fedavg(trees, [0.0, 0.0])
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0 * np.ones(2))
+
+    logits = [jnp.ones((3, 4), jnp.float32), 3.0 * jnp.ones((3, 4))]
+    agg = aggregate_knowledge(logits, [0.0, 0.0])
+    np.testing.assert_allclose(np.asarray(agg), 2.0 * np.ones((3, 4)))
+
+
+# --------------------------------------------------------------------------- #
+# Zero-fault robust aggregation: ledger parity with the plain engines
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fw", FRAMEWORKS)
+def test_robust_agg_ledger_parity_zero_faults(case_study, fw):
+    plain = _run(case_study, _fed(fw))
+    robust = _run(case_study, _fed(fw, robust_agg="trimmed_mean"))
+    assert plain.ledger.per_round() == robust.ledger.per_round(), fw
+    assert plain.ledger.by_name() == robust.ledger.by_name(), fw
+    assert plain.ledger.per_client_round() == \
+        robust.ledger.per_client_round(), fw
+    for hp, hr in zip(plain.history, robust.history):
+        assert hp.comm_bytes_per_client == hr.comm_bytes_per_client, fw
+    assert robust.rollovers == 0
+
+
+# --------------------------------------------------------------------------- #
+# Kill-and-resume: bit-exact crash recovery for all three frameworks
+# --------------------------------------------------------------------------- #
+RESUME_CASES = [
+    # fedllm takes the hardest combo: async arrivals (in-flight payloads
+    # + participation RNGs) under secure aggregation (mask vectors)
+    ("fedllm", dict(aggregation="async", max_staleness=2)),
+    ("kd", {}),
+    ("split", {}),
+]
+
+
+@pytest.mark.parametrize("fw,extra", RESUME_CASES,
+                         ids=[c[0] for c in RESUME_CASES])
+def test_kill_and_resume_bit_exact(case_study, tmp_path, fw, extra):
+    from repro.configs.base import PrivacyConfig
+
+    kw = dict(extra)
+    if fw == "fedllm":
+        kw["privacy"] = PrivacyConfig(secure_agg=True)
+    fed = _fed(fw, rounds=3, **kw)
+    full = _run(case_study, fed)
+
+    ckpt = str(tmp_path / f"ckpt_{fw}")
+    # "crash" after round 2 of 3: run the truncated schedule with
+    # checkpointing on, then resume the full schedule from disk
+    _run(case_study, dataclasses.replace(fed, rounds=2),
+         checkpoint_every=1, checkpoint_dir=ckpt)
+    resumed = _run(case_study, fed, resume_from=ckpt)
+
+    assert full.ledger.events == resumed.ledger.events, fw
+    assert full.history == resumed.history, fw
+    assert full.rollovers == resumed.rollovers, fw
+    _assert_trees_equal(full.final_lora, resumed.final_lora, fw)
+
+
+# --------------------------------------------------------------------------- #
+# Faulted rounds complete; Byzantine tolerance; quorum rollover
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("fw", FRAMEWORKS)
+def test_faulted_run_completes_with_quarantine(case_study, fw):
+    fed = _fed(fw, rounds=3, robust_agg="trimmed_mean", trim_frac=0.34,
+               faults=FaultConfig(dropout_rate=0.3, byzantine=1,
+                                  byzantine_mode="nan"))
+    res = _run(case_study, fed)
+    assert len(res.history) == 3, fw
+    names = res.ledger.by_name()
+    assert "quarantine" in names, (fw, sorted(names))
+    assert res.ledger.fault_overhead_bytes() > 0, fw
+    assert _finite(res.final_lora), fw
+
+
+@pytest.mark.parametrize("fw", FRAMEWORKS)
+def test_byzantine_tolerance_trimmed_mean(case_study, fw):
+    """With one norm-inflating client in a 3-client cohort, trimmed-mean
+    (trimming 1 from each side) must hold accuracy near the clean run —
+    the f=1 Byzantine-tolerance claim."""
+    clean = _run(case_study, _fed(fw))
+    attacked = _run(case_study, _fed(
+        fw, robust_agg="trimmed_mean", trim_frac=0.34,
+        faults=FaultConfig(byzantine=1,
+                           byzantine_mode="norm_inflation",
+                           byzantine_scale=100.0)))
+    assert _finite(attacked.final_lora), fw
+    assert abs(clean.final_accuracy - attacked.final_accuracy) <= 0.2, \
+        (fw, clean.final_accuracy, attacked.final_accuracy)
+
+
+def test_quorum_rollover_deterministic(case_study):
+    fed = _fed("fedllm", rounds=3, quorum=1.0,
+               faults=FaultConfig(dropout_rate=0.5))
+    a = _run(case_study, fed)
+    b = _run(case_study, fed)
+    assert a.rollovers > 0
+    assert a.rollovers == b.rollovers
+    assert len(a.history) == 3          # rolled rounds still complete
+    assert a.ledger.events == b.ledger.events
+
+
+def test_norm_screen_quarantines_inflated_payload(case_study):
+    fed = _fed("fedllm", rounds=2, screen_factor=5.0,
+               faults=FaultConfig(byzantine=1,
+                                  byzantine_mode="norm_inflation",
+                                  byzantine_scale=1000.0))
+    res = _run(case_study, fed)
+    assert "quarantine" in res.ledger.by_name()
+    assert _finite(res.final_lora)
+
+
+# --------------------------------------------------------------------------- #
+# Nightly fault-injection matrix (CI's fault-matrix job selects cells
+# via ``-k "<framework> and <backend>"``)
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ("sequential", "spmd", "cohort"))
+@pytest.mark.parametrize("fw", FRAMEWORKS)
+def test_fault_matrix(case_study, fw, backend):
+    cfg, pub, _, te = case_study
+    _, tr, _ = banking77.paper_splits(cfg.vocab_size, pad_len=24,
+                                      scale=0.04)
+    n = 4 if backend == "cohort" else 3
+    clients = partition.iid_partition(tr, n)
+    fed = _fed(fw, n_clients=n, rounds=2, backend=backend,
+               cohort_size=2 if backend == "cohort" else 0,
+               robust_agg="trimmed_mean", trim_frac=0.34,
+               screen_factor=10.0,
+               faults=FaultConfig(dropout_rate=0.25, byzantine=1,
+                                  byzantine_mode="inf"))
+    res = run_federated(cfg, fed, pub, clients, te, batch_size=16,
+                        eval_batch=64)
+    assert len(res.history) == 2, (fw, backend)
+    assert "quarantine" in res.ledger.by_name(), (fw, backend)
+    assert _finite(res.final_lora), (fw, backend)
